@@ -1,0 +1,34 @@
+"""Benchmark harness utilities. Output contract: one CSV line per probe,
+``name,us_per_call,derived`` (derived = the paper-claim metric the probe
+reproduces, e.g. an improvement percentage)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time of fn(*args) in microseconds (blocks on jax)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or \
+            isinstance(r, (jax.Array, tuple, list, dict)) else None
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        if isinstance(r, (jax.Array,)):
+            r.block_until_ready()
+        else:
+            jax.tree.map(lambda x: x.block_until_ready()
+                         if isinstance(x, jax.Array) else x, r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,33 @@
+"""Fig. 6 + Eq. 1 — scheduler cost vs batch size.
+
+FPGA LUT/FF grows ~3x per batch-size doubling (spatial comparators); the
+TPU network instead grows the *stage count* as log2(N)(log2(N)+1)/2 with a
+constant VMEM footprint per element (the lanes-normalized adaptation noted
+in DESIGN.md §2). Reports Eq. 1 cycles and the measured bitonic-kernel
+sort time per batch size; derived field carries both.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.config import scheduler_sort_stages
+from repro.core.timing import t_schedule
+from repro.kernels.bitonic_sort import ops
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for batch in (4, 8, 16, 32, 64, 128, 256, 512):
+        keys = jnp.asarray(rng.integers(0, 1 << 20, batch), jnp.int32)
+        us = time_call(lambda k=keys: ops.sort_with_indices(k), iters=3,
+                       warmup=1)
+        vmem_bytes = 2 * batch * 8
+        emit(f"fig6/batch{batch}", us,
+             f"eq1_cycles={t_schedule(batch):.0f}|"
+             f"stages={scheduler_sort_stages(batch)}|"
+             f"vmem={vmem_bytes}B")
+
+
+if __name__ == "__main__":
+    run()

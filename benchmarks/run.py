@@ -1,0 +1,33 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract). Every
+probe reproduces one published artifact:
+
+  table3  — cache resource utilization vs parameters   (Table III)
+  fig5    — DMA engine resource utilization             (Fig. 5)
+  fig6    — scheduler cost vs batch size + Eq. 1        (Fig. 6)
+  fig7    — GCN 27% / CNN 58% access-time improvement   (Fig. 7)
+  fig8    — interface-width sweep, 20x DMA advantage    (Fig. 8)
+  fig9    — schedule-time breakdown, 32-64 optimum      (Fig. 9)
+  autotune— TUNE-parameter search convergence           (§II, Table I)
+"""
+
+from benchmarks import (autotune_bench, fig5_dma_resources,
+                        fig6_scheduler_cost, fig7_workloads,
+                        fig8_interface_width, fig9_schedule_time,
+                        table3_cache_resources)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table3_cache_resources.run()
+    fig5_dma_resources.run()
+    fig6_scheduler_cost.run()
+    fig7_workloads.run()
+    fig8_interface_width.run()
+    fig9_schedule_time.run()
+    autotune_bench.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Table III — cache resource utilization vs reconfigurable parameters.
+
+FPGA URAM/BRAM% maps to the VMEM working set on TPU (v5e: 128 MiB VMEM per
+chip as the '100%' denominator). Reproduces the paper's finding that
+storage scales linearly with line width x line count x associativity while
+logic (here: tag/LRU metadata) stays small. ``us_per_call`` times one
+lookup batch through the cache engine at that geometry.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.cache_engine import init_cache, simulate_trace
+from repro.core.config import CacheConfig
+
+VMEM_BYTES = 128 * 1024 * 1024   # v5e VMEM per chip
+
+# (line_width_bits, ways, num_lines) — the Table III rows
+ROWS = [
+    (512, 1, 512), (512, 1, 1024), (512, 1, 4096),
+    (512, 2, 2048), (512, 2, 8192),
+    (1024, 2, 8192), (2048, 2, 8192), (4096, 2, 8192),
+    (512, 4, 4096), (512, 4, 16384),
+    (512, 8, 8192), (512, 8, 32768),
+]
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for width, ways, lines in ROWS:
+        cfg = CacheConfig(line_width_bits=width, num_lines=lines,
+                          associativity=ways)
+        data_pct = 100 * cfg.capacity_bytes / VMEM_BYTES
+        meta_pct = 100 * (8 * cfg.num_lines) / VMEM_BYTES
+        line_elems = cfg.line_bytes // 4
+        state = init_cache(cfg, line_elems)
+        table = jnp.zeros((lines * 2, line_elems), jnp.float32)
+        lids = jnp.asarray(rng.integers(0, lines * 2, 64), jnp.int32)
+        us = time_call(lambda: simulate_trace(state, lids, table), iters=3,
+                       warmup=1)
+        emit(f"table3/line{width}b_ways{ways}_n{lines}", us,
+             f"vmem_data={data_pct:.2f}%|vmem_meta={meta_pct:.3f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,275 @@
+"""Assemble EXPERIMENTS.md from the dry-run / optimized / perf JSONL
+records plus the benchmark CSV. Re-runnable:
+
+  PYTHONPATH=src python scripts/build_experiments.py
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.report import dryrun_table, fmt_bytes, load, roofline_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def read_jsonl(path):
+    p = os.path.join(ROOT, path)
+    return load(p) if os.path.exists(p) else []
+
+
+def perf_log():
+    recs = []
+    p = os.path.join(ROOT, "experiments_perf.jsonl")
+    if os.path.exists(p):
+        for line in open(p):
+            recs.append(json.loads(line))
+    return recs
+
+
+def opt_vs_base_table(base, opt):
+    bmap = {r["cell"]: r for r in base if "error" not in r}
+    rows = ["| cell | baseline frac | optimized frac | gain | "
+            "baseline bound s | optimized bound s |",
+            "|---|---|---|---|---|---|"]
+    for r in sorted(opt, key=lambda x: x["cell"]):
+        if "error" in r or r["cell"] not in bmap:
+            continue
+        b = bmap[r["cell"]]
+        bb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        ob = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        gain = r["roofline_fraction"] / max(b["roofline_fraction"], 1e-12)
+        rows.append(
+            f"| {r['cell']} | {b['roofline_fraction']:.4f} | "
+            f"{r['roofline_fraction']:.4f} | {gain:.2f}x | {bb:.4f} | "
+            f"{ob:.4f} |")
+    return "\n".join(rows)
+
+
+def bench_section():
+    path = os.path.join(ROOT, "bench_output.txt")
+    if not os.path.exists(path):
+        path = "/tmp/bench_all.txt"
+    if not os.path.exists(path):
+        return "(benchmarks not yet captured)"
+    keep = [l.strip() for l in open(path)
+            if l.startswith(("fig7/", "fig8/width1B", "fig9/optimum",
+                             "autotune/"))]
+    return "```\n" + "\n".join(keep) + "\n```"
+
+
+HEADER = """# EXPERIMENTS
+
+Reproduction + beyond-paper performance record for *Programmable
+FPGA-based Memory Controller* (Wijeratne et al., 2021) on the JAX/TPU
+framework described in DESIGN.md. Hardware model: TPU v5e — 197 TFLOP/s
+bf16, 819 GB/s HBM, ~50 GB/s/link ICI (4 links) per chip; meshes
+16x16 = 256 chips (single pod) and 2x16x16 = 512 chips (multi-pod).
+
+Measurement substrate (CPU container, no TPU): every cell is
+`.lower().compile()`d for the production meshes; FLOPs/bytes come from
+`compiled.cost_analysis()`, collective bytes from parsing the
+SPMD-partitioned HLO, with scanned-layer costs extrapolated exactly via
+1-group/2-group unrolled compiles (XLA bills while-loop bodies once; the
+extrapolation identity is verified in
+`tests/distribution/test_sharded.py::test_cost_extrapolation_exact_on_unrollable_model`).
+
+**Known backend bias (documented, uniform across cells):** XLA-CPU
+legalizes bf16 matmuls/collectives to f32, inflating byte counts up to 2x,
+and its `convert`-op traffic inflates the memory term for every cell
+(per-op attribution in §Perf). Term *deltas* between variants remain
+meaningful; absolute roofline fractions are conservative lower bounds.
+Extrapolation error bars, measured against fully-unrolled ground truth on
+a toy config: ~6-9% FLOPs, ~15% collective bytes (fusion boundaries and
+depth-dependent collective combining); both shrink with model scale as the
+uniform layer term dominates.
+"""
+
+PAPER_VALIDATION = """
+## §Paper-validation (the faithful-reproduction gate)
+
+All paper claims are reproduced on the cycle-level DDR4-2400 open-row
+simulator (`repro.core.timing`) — the same metric (total memory access
+time) the paper reports, with the commercial-IP baseline modeled as a
+shallow greedy reorder window (MIG-like; `window=1` = pure FIFO):
+
+| claim (paper) | reproduced | where |
+|---|---|---|
+| GCN access time −27% | **−29.4%** vs MIG-like baseline (−44% vs FIFO), DMA 91% of time (paper: 99%) | `benchmarks/fig7_workloads.py` |
+| CNN access time −58% ("up to") | **−47.6%** vs MIG-like (−50.8% vs FIFO), cache hit 96%, DMA 75% (paper: 80%) | same |
+| 20x bulk-vs-narrow interface | **12.8x** at 1 B interface width (conservative burst model charges CAS per burst; same simulator both paths) | `benchmarks/fig8_interface_width.py` |
+| batch 32–64 optimal | **64** under the paper's own criterion (performance per LUT/FF-class resource, Fig. 6's ~3x/doubling); raw throughput keeps improving to 512, matching Fig. 9's monotone total-time curve | `benchmarks/fig9_schedule_time.py` |
+| Eq. 1 schedule time | exact: `t_schedule(N) = N + log2N(log2N+1)/2 + L_cond`, network stage count asserted in kernel tests | `tests/core/test_timing.py`, `tests/kernels/test_bitonic_sort.py` |
+| Table III / Fig. 5 / Fig. 6 resource scaling | linear VMEM scaling with line width x count x ways / channels x buffers; constant-logic scheduler with log²N stages | `benchmarks/table3_*.py`, `fig5_*.py`, `fig6_*.py` |
+| weak consistency model | property-tested: single-type batches, same-address arrival order preserved under reordering, batch FIFO service | `tests/core/test_scheduler.py` |
+
+Key benchmark lines (full CSV in `bench_output.txt`):
+"""
+
+PERF_NARRATIVE = """
+## §Perf — hillclimb log (hypothesis → change → measure → verdict)
+
+Three cells selected per the methodology: **qwen2-moe/train_4k** (worst
+useful-FLOPs ratio 0.02 AND the paper-representative cell — MoE dispatch
+is the controller scheduler), **mixtral/train_4k** (most collective-bound:
+19.8 s collective term at baseline), **granite/decode_32k** (serving cell,
+collective ~ memory, worst roofline-fraction class).
+
+### qwen2-moe-a2.7b / train_4k  (baseline frac 0.0107 → 0.0203)
+
+| # | hypothesis | change | before → after (dominant terms) | verdict |
+|---|---|---|---|---|
+| 1 | per-stage attribution shows the GShard one-hot cumsum position computation is billed O(n·E)-quadratically (1.69e16 of 1.82e16 layer FLOPs); replacing it with the **paper's scheduler** — stable sort by expert/row id, slot = offset in the sorted run — removes it at identical semantics (bit-exact incl. drop behaviour, tested) | `moe_dispatch="sort"` | compute 16.51 s → **0.44 s** (38x); useful ratio 0.02 → 0.77 | **confirmed** — the paper's reorder-by-row idea, applied at cluster scale, IS the fix |
+| 2 | CE-loss logits (1M x 152k) dominate HBM bytes; chunked CE with rematerialized logits should cut the memory term | `loss_chunks=16` | memory 28.74 → 30.01 s | **refuted** — per-layer traffic dominates (outer incl. loss = 0.4% of bytes by G1/G2 differencing); XLA-CPU bills op bytes regardless of chunk residency. Kept as opt-in feature (real TPU VMEM-residency win not measurable here) |
+| 3 | per-op attribution of the 103.7 GiB/device temps: GSPMD **replicates the scatter operand** because dispatch indices span the capacity-sharded dim; keeping the dispatch buffers sharded on the embedding dim through scatter/gather (resharding only around the expert einsums) makes the scatter partitionable | sharding constraints around dispatch | temps 103.7 → **21.8 GiB/dev** (4.8x); HBM bytes 6.03e15 → 3.47e15; collective 14.4 → 6.5 s | **confirmed** |
+
+### mixtral-8x7b / train_4k  (baseline frac 0.036 → 0.150)
+
+| # | hypothesis | change | before → after | verdict |
+|---|---|---|---|---|
+| 1 | carry over the qwen2 fixes | sort dispatch + scatter sharding | coll 19.8 → 9.5 s; memory 44.9 → 23.8 s; frac 0.036 → 0.068 | **confirmed** |
+| 2 | `dots_saveable` remat saves one forward recompute → weight all-gathers 3→2 passes, collective −33% | `remat_policy="dots"` | coll 9.5 → 8.9 s (−7%), compute −25%, but temps 28 → **174 GiB/dev** | **refuted** (weight-AG is a small AG share; bwd re-gathers regardless; capacity cost catastrophic) — reverted |
+| 3 | remaining 818 GB/dev all-reduce comes from the *global* scatter (partial buffers all-reduced across data shards). The paper's schedulers are **bounded and per-controller** (Table I batch ≤ 512, one per PE group); restoring that structure — GShard-style local groups, one scheduler instance per data shard, scatter batch-dim sharded — makes dispatch collective-free | `num_groups = DP shards` (group-local sort/scatter/capacity) | memory 23.8 → **10.7 s**, coll 9.5 → **5.7 s** (CP 260 → 2 GB); frac 0.068 → **0.150** | **confirmed** — second instance of the paper's structure fixing a scale bottleneck |
+| 4 | larger flash-attention KV blocks rewrite online-softmax accumulators fewer times → memory term down | `attn_kv_block 1024→4096` | memory 10.7 → 12.2 s | **refuted** (bigger score blocks outweigh accumulator savings at S=4k) — reverted; the real fix is the Pallas `flash_attention` kernel whose accumulators live in VMEM (validated interpret-mode; not lowerable on the CPU dry-run mesh) |
+
+### granite-34b / decode_32k  (baseline frac 0.003 → 0.0034, collective −112x)
+
+| # | hypothesis | change | before → after | verdict |
+|---|---|---|---|---|
+| 1 | HLO dump shows ZeRO-3 weight all-gathers (f32-legalized) re-run **every decode step** (11 GB/dev/token-step) — training sharding is wrong for serving; replicating weights across the data axis (sharded only over model: 4.3 GB/dev, fits 16 GB HBM) removes them | serving rules `w_fsdp=None` | collective 0.0592 → **0.00053 s** (112x); AG 11 GB → 0.05 GB/step | **confirmed** |
+| 2 | the same layout helps every serve cell | apply to all decode/long cells | dense decode_32k: +5–18% bound; **long_500k regressed 5–25x** (mamba2 bound 0.0002 → 0.0054 s) and MoE decode −13% | **refuted as a universal rule** — with batch 1 the FSDP(+TP) layout is 256-way 2D tensor parallelism: tiny psums beat 16x more weight reads; MoE expert weights too large to replicate |
+| 3 | serving weight layout must be **batch- and arch-conditional**: replicate over data iff dense arch and global_batch ≥ DP shards; keep 2D sharding for batch-1 long-context and MoE serving | `sharding.serving_weight_overrides` (now the serve default) | regressed cells restored to their best layout; granite decode keeps the 112x | **confirmed** |
+| 4 | decode is now at its memory floor: per-step bytes = weights + KV shard — arithmetic-intensity-bound at batch 128 (ideal frac ≤ ~0.5 by 2·N·B/weight-bytes); remaining gap is f32-legalization inflation | (analysis) | memory term 0.0695 s ≈ floor | stop on layout ideas |
+| 5 | int8 KV cache (per-position/head scales, dequantize at read) halves the cache share of the floor; weights still dominate at batch 128 so the total moves modestly | `kv_cache_dtype="int8"` | memory 0.0695 → **0.0620 s** (−11%); cache state −44%; decode accuracy within 0.5–0.7% rel (tested, error non-compounding over steps) | **confirmed** — opt-in serving feature |
+
+### Extension: expert-parallel dispatch (jamba-v0.1-52b / train_4k)
+
+The paper's DMA engine at cluster scale: `models/moe_ep.py` implements
+true expert parallelism under `shard_map` — tokens stable-sorted by
+*destination shard* (row = expert owner), packed into per-destination
+staging buffers (bounded send capacity = the paper's per-controller
+batches), moved with one `all_to_all` bulk transfer each way, experts
+whole on their owner shard. Bit-matches the TP dispatch at ample capacity
+(`tests/distribution`), gradients flow through the shard_map.
+
+| strategy | compute s | memory s | collective s | frac | verdict |
+|---|---|---|---|---|---|
+| TP (default) | 2.20 | 11.13 | 5.08 | **0.135** | best overall at v5e single-pod scale |
+| EP (`--moe-strategy ep`) | 2.25 | 17.58 | **1.53** | 0.085 | collective term 3.3x lower — preferable when interconnect-bound (cross-pod DP+EP, slower links, larger TP degrees); memory term pays for unsharded expert FFN intermediates + data-replicated expert weights |
+
+A measured *term trade*, not a dominance: the framework exposes both and
+the autotuner-style choice belongs to the deployment (EP additionally
+requires `E % tp == 0`, no shared experts — jamba qualifies, mixtral/qwen2
+do not at tp=16).
+
+### Stop criteria & residuals
+
+Each cell stopped after consecutive <5% candidates on the dominant term.
+The dominant residual everywhere is the memory term's `convert` traffic
+(XLA-CPU bf16→f32 legalization — per-op attribution: 539 GiB/dev of
+convert outputs in one qwen2 layer vs 18 GiB of dot outputs), which does
+not exist on real TPUs. On-target, the same artifacts would be
+re-profiled with `xprof`; the structural fixes above (dispatch FLOPs,
+scatter partitioning, group-local scheduling, serving weight layout) are
+backend-independent.
+"""
+
+FEATURES = """
+## Beyond-paper optimizations & production features (summary)
+
+* **Sort-based MoE dispatch** (paper's scheduler at cluster scale) — 38x
+  compute-term reduction on fine-grained MoE; bit-exact vs naive dispatch.
+* **Group-local schedulers** (paper's bounded per-controller batches) —
+  collective-free dispatch; 2.2x memory / 1.7x collective on mixtral.
+* **Dispatch-buffer sharding discipline** — 4.8x peak-memory reduction.
+* **Serving weight layout** (replicate-over-data) — 112x decode collective
+  reduction; production serve path defaults.
+* **Expert parallelism** (`moe_strategy="ep"`) — shard_map all-to-all
+  dispatch, value-matching TP; measured term trade (collective 3.3x lower
+  / memory 1.6x higher on jamba) — the deployment chooses.
+* **int8 KV cache** (`kv_cache_dtype="int8"`) — 44% cache-state reduction,
+  <1% decode error (non-compounding, tested over multi-step decode).
+* **Chunked cross-entropy** (`loss_chunks`) — opt-in; exact (tested
+  value+grad); benefits VMEM residency on real TPUs.
+* **Remat policy knob** (`remat_policy`) — nothing/dots tradeoff measured.
+* **Pallas kernels** — bitonic scheduler network, revisit-dedup sorted
+  gather, cache tag/LRU pipelines, multi-channel DMA, flash attention with
+  block-causal skip; all interpret-validated against jnp oracles.
+* **Fault tolerance** — stateless data pipeline (exact resume, tested
+  bitwise), atomic async checkpoints, elastic mesh restore (tested on a
+  shrunk mesh), straggler watchdog + rescale planner, int8 error-feedback
+  gradient compression for the cross-pod axis.
+"""
+
+
+def main() -> None:
+    base = read_jsonl("experiments_dryrun.jsonl")
+    opt = read_jsonl("experiments_optimized.jsonl")
+
+    ok = [r for r in base if "error" not in r]
+    parts = [HEADER]
+    parts.append("\n## §Dry-run\n")
+    parts.append(
+        f"All **{len(ok)}/{len(base)}** (architecture x shape x mesh) cells "
+        "lower + compile successfully on both production meshes — 33 "
+        "supported cells x {16x16, 2x16x16} (the 40-cell assignment minus "
+        "documented skips: encoder-only decode, full-attention long_500k; "
+        "see DESIGN.md §5). `memory_analysis()`/`cost_analysis()` per cell:\n")
+    parts.append(dryrun_table(base))
+    parts.append(
+        "\nMulti-pod (2pod) rows prove the `pod` axis shards: per-device "
+        "state/temp bytes halve for train cells (DP over pods) while "
+        "global FLOPs are preserved.\n\nProvenance: baseline MoE cells "
+        "were measured with the naive cumsum dispatch and the global "
+        "(ungrouped) scheduler — the pre-§Perf defaults; decode cells "
+        "with training (ZeRO-3) weight sharding. The optimized table "
+        "below uses the current framework defaults that §Perf derived.\n")
+
+    parts.append("\n## §Roofline (single-pod, 256 chips) — baseline\n")
+    parts.append(
+        "Terms per the assignment: compute = HLO_FLOPs/(chips·197e12), "
+        "memory = HLO_bytes/(chips·819e9), collective = per-device "
+        "collective bytes/(4·50e9). MODEL_FLOPS = 6·N_active·D (train) or "
+        "2·N_active·tokens (serve).\n")
+    parts.append(roofline_table(base, "1pod"))
+    parts.append("\n### Multi-pod (512 chips) — baseline\n")
+    parts.append(roofline_table(base, "2pod"))
+    parts.append("""
+Per-cell bottleneck notes (what would move the dominant term down):
+* *train cells* — memory-bound everywhere: activation+convert traffic;
+  levers = dispatch sharding (MoE, confirmed), microbatching, Pallas flash
+  (VMEM accumulators), bf16-native backend.
+* *prefill 32k* — yi/qwen2 compute-bound (yi: replicated inner attention for
+  56 heads on a 16-way axis — padding-free layouts are the lever; qwen2:
+  dispatch FLOPs, fixed in §Perf); others memory-bound on score/convert
+  traffic.
+* *decode* — memory-bound at the weight+KV read floor once serving layout
+  fixed (§Perf); useful ratios < 0.5 reflect per-token weight reads at
+  modest batch.
+* *long_500k* — state-dominated (SSM state or ring KV): trivially small
+  terms; bottleneck is launch overhead, not data movement.
+""")
+
+    if opt:
+        parts.append("\n## §Roofline — optimized (current framework "
+                     "defaults)\n")
+        parts.append(
+            "Baseline vs optimized (sort dispatch + group-local scheduler "
+            "+ dispatch sharding for MoE cells; replicated serving weights "
+            "for decode cells):\n")
+        parts.append(opt_vs_base_table(base, opt))
+
+    parts.append(PERF_NARRATIVE)
+    parts.append(PAPER_VALIDATION)
+    parts.append(bench_section())
+    parts.append(FEATURES)
+
+    out = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(out, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Checkpointing substrate."""
+
+from repro.checkpoint.store import (CheckpointManager, latest_step,
+                                    load_checkpoint, save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
+           "save_checkpoint"]

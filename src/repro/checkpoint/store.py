@@ -1,0 +1,196 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Design (orbax-like, self-contained):
+
+* **Layout** — one ``.npy`` per pytree leaf under ``<dir>/step_<N>.tmp/``,
+  plus ``manifest.json`` (tree paths, shapes, dtypes, step). The directory
+  is atomically renamed to ``step_<N>/`` after all leaves + manifest are
+  durable, so a crash mid-save can never produce a directory that
+  ``latest_step`` would pick up.
+* **Async** — ``save`` snapshots leaves to host RAM synchronously (cheap),
+  then writes on a daemon thread; ``wait()`` joins. Training continues
+  during the write (the checkpoint-stall the paper's DMA engine hides for
+  accelerators, applied to the training loop itself).
+* **Elastic restore** — leaves are loaded as numpy and ``device_put`` with
+  the *target* mesh's NamedSharding: restoring onto a different mesh shape
+  (fewer hosts after a failure, more after scale-up) re-shards
+  transparently.
+* **Retention** — keep the last ``keep`` checkpoints; GC runs post-rename.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+# numpy can't natively serialize bf16/fp8 — store as a same-width unsigned
+# view and record the logical dtype in the manifest.
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+           "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8)}
+
+
+def _encode(arr: np.ndarray):
+    for name, (logical, carrier) in _EXOTIC.items():
+        if arr.dtype == logical:
+            return arr.view(carrier), name
+    return arr, str(arr.dtype)
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        return arr.view(_EXOTIC[dtype_name][0])
+    return arr
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    *, blocking: bool = True) -> threading.Thread:
+    """Write ``tree`` under ``directory/step_<step>``; atomic via rename."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"step_{step}.tmp")
+    final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+
+    # Snapshot to host RAM now so training may mutate buffers afterwards.
+    leaves = {k: np.asarray(v) for k, v in _flatten_with_paths(tree).items()}
+
+    def write():
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": {}}
+        for key, arr in leaves.items():
+            fname = key.replace("/", "__") + ".npy"
+            carrier, dtype_name = _encode(arr)
+            np.save(os.path.join(tmp, fname), carrier)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": dtype_name}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    if blocking:
+        t.join()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name,
+                                             "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, target_tree: Any,
+                    *, mesh=None, specs=None) -> Any:
+    """Restore into the structure of ``target_tree``.
+
+    With ``mesh``+``specs`` the leaves are placed with NamedSharding —
+    loading onto a different mesh than the one that saved re-shards
+    automatically (elastic restart).
+    """
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    keys = list(_flatten_with_paths(target_tree).keys())
+    missing = [k for k in keys if k not in manifest["leaves"]]
+    if missing:
+        raise ValueError(f"checkpoint missing leaves: {missing[:5]} ...")
+
+    spec_leaves = (_flatten_with_paths(specs) if specs is not None else {})
+
+    loaded = {}
+    for key in keys:
+        meta = manifest["leaves"][key]
+        arr = _decode(np.load(os.path.join(path, meta["file"])),
+                      meta["dtype"])
+        if mesh is not None and key in spec_leaves:
+            sharding = jax.sharding.NamedSharding(mesh, spec_leaves[key])
+            loaded[key] = jax.device_put(arr, sharding)
+        else:
+            loaded[key] = jax.numpy.asarray(arr)
+
+    flat, treedef = jax.tree_util.tree_flatten(target_tree)
+    ordered = [loaded[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Save-every-K orchestration with retention and async writes."""
+
+    directory: str
+    save_every: int = 100
+    keep: int = 3
+    _pending: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, tree: Any) -> bool:
+        if step % self.save_every:
+            return False
+        self.wait()
+        self._pending = save_checkpoint(self.directory, step, tree,
+                                        blocking=False)
+        return True
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        self._gc()
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(m.group(1)) for m in
+            (_STEP_RE.match(n) for n in os.listdir(self.directory)) if m)
+        for s in steps[:-self.keep] if len(steps) > self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, target_tree: Any, *, mesh=None, specs=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, load_checkpoint(self.directory, step, target_tree,
+                                     mesh=mesh, specs=specs)

@@ -1,0 +1,9 @@
+"""Architecture & shape configs (one module per assigned arch)."""
+
+from repro.configs.base import (ArchConfig, MoESpec, SSMSpec, ShapeConfig,
+                                SHAPES, supported_shapes)
+from repro.configs.registry import ARCH_IDS, all_archs, canonical, get_arch
+
+__all__ = ["ArchConfig", "MoESpec", "SSMSpec", "ShapeConfig", "SHAPES",
+           "supported_shapes", "ARCH_IDS", "all_archs", "canonical",
+           "get_arch"]

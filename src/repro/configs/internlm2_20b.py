@@ -1,0 +1,26 @@
+"""internlm2-20b — dense GQA transformer.
+
+[dense] 48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92544
+[arXiv:2403.17297; hf]
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internlm2-20b",
+    family="dense",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92544,
+    head_dim=128,
+    source="arXiv:2403.17297",
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    d_ff=128, vocab_size=256, head_dim=16)

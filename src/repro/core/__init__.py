@@ -1,0 +1,22 @@
+"""Core — the paper's programmable memory controller as a JAX module.
+
+Engines (scheduler / cache / DMA) live in sibling modules; the unified
+request-routing IP is ``controller.MemoryController``; ``timing`` carries
+the DRAM/HBM cost model (Eq. 1-3) and the cycle-level simulator used for
+the paper-claim reproductions.
+"""
+
+from repro.core.config import (CacheConfig, DMAConfig, MemoryControllerConfig,
+                               PAPER_EVAL_CONFIG, SchedulerConfig)
+from repro.core.controller import (HotRowCache, MemoryController,
+                                   sorted_gather)
+from repro.core.timing import (DDR4_2400, DRAMTimings, HBM_V5E,
+                               roofline_time_s, simulate_dram_access,
+                               t_schedule)
+
+__all__ = [
+    "CacheConfig", "DMAConfig", "MemoryControllerConfig", "SchedulerConfig",
+    "PAPER_EVAL_CONFIG", "HotRowCache", "MemoryController", "sorted_gather",
+    "DDR4_2400", "HBM_V5E", "DRAMTimings", "roofline_time_s",
+    "simulate_dram_access", "t_schedule",
+]

@@ -1,0 +1,134 @@
+"""Cache engine — reconfigurable set-associative LRU cache (paper §IV-A).
+
+The FPGA implementation keeps tags/data in URAM and runs two interlocked
+pipelines (4-stage PE pipeline for lookups, 3-stage MEM pipeline for fills)
+sharing Tag RAM, Data RAM and LRU state. Here the same structure is a
+functional state pytree — ``CacheState`` — threaded through a ``lax.scan``:
+each scan step is one "pipeline beat" that performs the tag compare, the LRU
+update, and (on miss) the MEM-pipeline fill of the victim way. MEM-pipeline
+priority (fills stall lookups) is inherent in the sequential scan semantics.
+
+This module is the *oracle* for the `repro.kernels.cache_lookup` Pallas
+kernel and the measurement substrate for the Table III / Fig. 7 benchmarks.
+Address mapping: line = addr // line_bytes, set = line % num_sets,
+tag = line // num_sets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import CacheConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CacheState:
+    """Tag RAM + Data RAM + LRU age matrix, as arrays.
+
+    ``age`` holds the global access stamp of each way's last touch; LRU
+    victim = argmin(age), with invalid ways pinned to age -1 so they are
+    always chosen first. ``clock`` is the global stamp counter.
+    """
+
+    tags: jnp.ndarray    # (sets, ways) int32
+    valid: jnp.ndarray   # (sets, ways) bool
+    age: jnp.ndarray     # (sets, ways) int32
+    data: jnp.ndarray    # (sets, ways, line_elems) — cached lines
+    clock: jnp.ndarray   # () int32
+
+
+def init_cache(
+    config: CacheConfig, line_elems: int, dtype=jnp.float32
+) -> CacheState:
+    sets, ways = config.num_sets, config.associativity
+    return CacheState(
+        tags=jnp.zeros((sets, ways), jnp.int32),
+        valid=jnp.zeros((sets, ways), bool),
+        age=jnp.full((sets, ways), -1, jnp.int32),
+        data=jnp.zeros((sets, ways, line_elems), dtype),
+        clock=jnp.zeros((), jnp.int32),
+    )
+
+
+def _split_addr(line_id: jnp.ndarray, num_sets: int):
+    return line_id % num_sets, line_id // num_sets   # (set, tag)
+
+
+def lookup(
+    state: CacheState, line_id: jnp.ndarray, fill_line: jnp.ndarray,
+) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray]:
+    """One cache beat: probe ``line_id``; on miss install ``fill_line``.
+
+    Returns (new_state, hit?, line_data). ``fill_line`` is the line the MEM
+    pipeline would return from DRAM; on a hit it is ignored — the Data RAM
+    copy is served (so a stale fill cannot clobber a dirty line).
+    """
+    num_sets = state.tags.shape[0]
+    set_idx, tag = _split_addr(line_id, num_sets)
+
+    way_tags = state.tags[set_idx]            # (ways,)
+    way_valid = state.valid[set_idx]
+    match = way_valid & (way_tags == tag)
+    hit = jnp.any(match)
+    hit_way = jnp.argmax(match)               # valid only when hit
+
+    victim = jnp.argmin(state.age[set_idx])   # LRU (invalid age=-1 wins)
+    way = jnp.where(hit, hit_way, victim)
+
+    line_out = jnp.where(hit, state.data[set_idx, way], fill_line)
+
+    clock = state.clock + 1
+    new_state = CacheState(
+        tags=state.tags.at[set_idx, way].set(tag),
+        valid=state.valid.at[set_idx, way].set(True),
+        age=state.age.at[set_idx, way].set(clock),
+        data=state.data.at[set_idx, way].set(line_out),
+        clock=clock,
+    )
+    return new_state, hit, line_out
+
+
+def simulate_trace(
+    state: CacheState, line_ids: jnp.ndarray, table: jnp.ndarray,
+) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray]:
+    """Service a request trace through the cache against backing ``table``.
+
+    ``table[line_id]`` plays DRAM. Returns (final_state, hits (N,) bool,
+    lines (N, line_elems)). Sequential scan = the shared-pipeline stall
+    semantics of the paper (one beat at a time through shared Tag/Data RAM).
+    """
+
+    def step(st, lid):
+        new_st, hit, line = lookup(st, lid, table[lid])
+        return new_st, (hit, line)
+
+    final, (hits, lines) = jax.lax.scan(step, state, line_ids)
+    return final, hits, lines
+
+
+def hit_rate_oracle(
+    config: CacheConfig, line_ids: np.ndarray
+) -> Tuple[np.ndarray, float]:
+    """Fast numpy LRU-cache reference (no data movement) — hit mask + rate.
+
+    Used by benchmarks where only the hit/miss classification feeds the
+    timing model (Eq. 2) and by hypothesis tests as an independent oracle.
+    """
+    sets, ways = config.num_sets, config.associativity
+    tags = [dict() for _ in range(sets)]      # set -> {tag: last_use}
+    hits = np.zeros(line_ids.shape[0], dtype=bool)
+    for i, lid in enumerate(np.asarray(line_ids, dtype=np.int64)):
+        s, t = int(lid % sets), int(lid // sets)
+        entry = tags[s]
+        if t in entry:
+            hits[i] = True
+        elif len(entry) >= ways:
+            del entry[min(entry, key=entry.get)]
+        entry[t] = i
+    return hits, float(hits.mean()) if hits.size else 0.0

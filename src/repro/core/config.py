@@ -1,0 +1,201 @@
+"""Memory-controller configuration — the paper's Table I as a validated config.
+
+The paper exposes every controller knob as a synthesis-time HDL parameter.
+Here the same knobs are resolved at *trace/compile time*: a
+``MemoryControllerConfig`` is carried into jitted functions as static
+structure, so changing a parameter re-specializes the compiled program the
+way re-synthesis re-specializes the FPGA bitstream.
+
+Dependency classes mirror Table I:
+  PL   — platform (TPU generation / memory interface) constraints,
+  RS   — resource (VMEM budget) constraints,
+  SPEC — functional specification of the attached accelerator (model),
+  TUNE — tunable; ``repro.core.autotune`` searches these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+def _check_range(name: str, value: int, lo: int, hi: int) -> None:
+    if not lo <= value <= hi:
+        raise ValueError(
+            f"{name}={value} outside supported range [{lo}, {hi}] "
+            "(see Table I of the paper)"
+        )
+
+
+def _check_pow2(name: str, value: int) -> None:
+    if value < 1 or value & (value - 1):
+        raise ValueError(f"{name}={value} must be a power of two")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Memory scheduler parameters (Table I, 'Memory Scheduler')."""
+
+    enabled: bool = True
+    # Max requests reordered per batch. Paper range 4-128; Fig. 6 explores up
+    # to 512 before resource use becomes impractical. [TUNE]
+    batch_size: int = 64
+    # Max cycles spent on batch formation before a partial batch is issued.
+    # Prevents deadlock under low traffic. [TUNE]
+    timeout_cycles: int = 16
+    # Bypass scheduling when the incoming stream is already sequential or
+    # traffic is low (paper §V-C).
+    bypass_sequential: bool = True
+    # Parallel<->serial data conditioning latency around the sorting network
+    # (paper: < 2 cycles).
+    data_cond_cycles: int = 2
+
+    def __post_init__(self) -> None:
+        _check_range("scheduler.batch_size", self.batch_size, 4, 512)
+        _check_pow2("scheduler.batch_size", self.batch_size)
+        _check_range("scheduler.timeout_cycles", self.timeout_cycles, 4, 40)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Cache engine parameters (Table I, 'Cache')."""
+
+    enabled: bool = True
+    # Cache line width in *bits* to match the paper's table (256-1024 typical;
+    # Table III explores to 4096).
+    line_width_bits: int = 512
+    num_lines: int = 4096
+    # Degree of set-associativity. [TUNE]
+    associativity: int = 4
+
+    def __post_init__(self) -> None:
+        _check_range("cache.line_width_bits", self.line_width_bits, 256, 4096)
+        _check_range("cache.num_lines", self.num_lines, 256, 32768)
+        _check_range("cache.associativity", self.associativity, 1, 16)
+        _check_pow2("cache.num_lines", self.num_lines)
+        _check_pow2("cache.associativity", self.associativity)
+        if self.associativity > self.num_lines:
+            raise ValueError("associativity cannot exceed num_lines")
+
+    @property
+    def line_bytes(self) -> int:
+        return self.line_width_bits // 8
+
+    @property
+    def num_sets(self) -> int:
+        return self.num_lines // self.associativity
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.num_lines * self.line_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class DMAConfig:
+    """DMA engine parameters (Table I, 'Direct Memory Access')."""
+
+    enabled: bool = True
+    # Largest single bulk transaction (256B - 256KB).
+    max_transaction_bytes: int = 16384
+    # Number of parallel DMA buffers/channels (1-8). On TPU this is the
+    # depth of in-flight async HBM copies. [SPEC+TUNE]
+    num_parallel_dma: int = 4
+    # Staging buffer per channel; on TPU this is VMEM occupied per channel.
+    buffer_bytes: int = 16384
+
+    def __post_init__(self) -> None:
+        _check_range("dma.max_transaction_bytes", self.max_transaction_bytes,
+                     256, 256 * 1024)
+        _check_range("dma.num_parallel_dma", self.num_parallel_dma, 1, 8)
+        _check_range("dma.buffer_bytes", self.buffer_bytes, 256, 1 << 20)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryControllerConfig:
+    """Top-level controller config (paper Table I, 'Overall Design')."""
+
+    # --- platform (PL) ---
+    # External memory interface width. DDR4 on U250 is 64B (512b); TPU v5e
+    # HBM transactions are modeled at 512B bursts.
+    mem_if_data_width_bytes: int = 512
+    mem_if_addr_width: int = 31
+    # --- application spec (SPEC) ---
+    app_io_data_width_bytes: int = 64
+    app_addr_width: int = 32
+    num_pes: int = 8
+    # --- engines ---
+    scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    dma: DMAConfig = dataclasses.field(default_factory=DMAConfig)
+    # FLIT generation + path-selection latency budget (paper: <= 10 cycles).
+    ctrl_overhead_cycles: int = 10
+
+    def __post_init__(self) -> None:
+        _check_range("mem_if_data_width_bytes", self.mem_if_data_width_bytes,
+                     64, 512)
+        _check_range("mem_if_addr_width", self.mem_if_addr_width, 20, 36)
+        _check_range("app_io_data_width_bytes", self.app_io_data_width_bytes,
+                     1, 512)
+        _check_range("app_addr_width", self.app_addr_width, 20, 40)
+        _check_range("num_pes", self.num_pes, 1, 128)
+        _check_range("ctrl_overhead_cycles", self.ctrl_overhead_cycles, 0, 10)
+        if not (self.scheduler.enabled or self.cache.enabled
+                or self.dma.enabled):
+            raise ValueError(
+                "at least one engine (scheduler/cache/dma) must be enabled")
+
+    # ---- derived resource model (paper §V-B analogue) --------------------
+    def vmem_footprint_bytes(self) -> int:
+        """On-chip (VMEM) bytes claimed by the configured engines.
+
+        FPGA URAM/BRAM consumption (Table III / Fig. 5 / Fig. 6) maps to the
+        VMEM working set on TPU. Used by benchmarks and by the autotuner's
+        resource constraint.
+        """
+        total = 0
+        if self.cache.enabled:
+            # data + tags (tag ~ 4B/line) + LRU age (4B/line)
+            total += self.cache.capacity_bytes + 8 * self.cache.num_lines
+        if self.dma.enabled:
+            # double-buffered staging per channel
+            total += 2 * self.dma.num_parallel_dma * self.dma.buffer_bytes
+        if self.scheduler.enabled:
+            # key/value pairs being sorted, double-buffered input queues
+            n = self.scheduler.batch_size
+            total += 2 * n * 8 + 2 * n * self.app_io_data_width_bytes
+        return total
+
+    def describe(self) -> str:
+        lines = [
+            "MemoryControllerConfig:",
+            f"  mem-if {self.mem_if_data_width_bytes}B / "
+            f"addr {self.mem_if_addr_width}b, "
+            f"app-io {self.app_io_data_width_bytes}B, PEs={self.num_pes}",
+            f"  scheduler: enabled={self.scheduler.enabled} "
+            f"batch={self.scheduler.batch_size} "
+            f"timeout={self.scheduler.timeout_cycles}",
+            f"  cache: enabled={self.cache.enabled} "
+            f"line={self.cache.line_width_bits}b x {self.cache.num_lines} "
+            f"ways={self.cache.associativity} "
+            f"({self.cache.capacity_bytes / 1024:.0f} KiB)",
+            f"  dma: enabled={self.dma.enabled} "
+            f"channels={self.dma.num_parallel_dma} "
+            f"txn<={self.dma.max_transaction_bytes}B",
+            f"  vmem footprint ~ {self.vmem_footprint_bytes() / 1024:.1f} KiB",
+        ]
+        return "\n".join(lines)
+
+
+def scheduler_sort_stages(batch_size: int) -> int:
+    """Bitonic network stage count for a batch of N: log2(N)(log2(N)+1)/2."""
+    logn = int(math.log2(batch_size))
+    return logn * (logn + 1) // 2
+
+
+# Paper Table IV — the configuration used for the GCN/CNN evaluation.
+PAPER_EVAL_CONFIG = MemoryControllerConfig(
+    cache=CacheConfig(line_width_bits=512, num_lines=4096, associativity=4),
+    dma=DMAConfig(buffer_bytes=16 * 1024, num_parallel_dma=4),
+    scheduler=SchedulerConfig(batch_size=64, timeout_cycles=16),
+)

@@ -1,0 +1,117 @@
+"""DMA engine — parallel bulk transfers (paper §IV-B).
+
+The FPGA DMA engine owns N buffers, each servicing one in-flight bulk
+transfer; FLITs of a transfer accumulate in a buffer until the transfer is
+complete, then the external access is issued. On TPU the analogue is a
+double-buffered async-copy pipeline: ``num_parallel_dma`` concurrent
+HBM→VMEM copies of ``max_transaction_bytes`` each, overlapping transfer with
+consumption. This module plans transfers (control plane) and executes them
+(data plane: Pallas ``dma_copy`` kernel on TPU, dynamic-slice loop oracle
+elsewhere).
+
+The engine's purpose in the framework mirrors the paper's three advantages:
+bulk requests reduce controller input traffic, streaming data bypasses the
+cache (no pollution), and wide sequential bursts saturate HBM bandwidth
+(Fig. 8's 20x case).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import DMAConfig
+from repro.core.timing import DRAMTimings, DDR4_2400
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferPlan:
+    """One bulk transfer split into channel-assigned transactions."""
+
+    channel: np.ndarray      # (num_txn,) channel id
+    offset: np.ndarray       # (num_txn,) byte offset
+    size: np.ndarray         # (num_txn,) byte size
+    total_bytes: int
+
+    @property
+    def num_transactions(self) -> int:
+        return int(self.offset.shape[0])
+
+
+def plan_transfer(total_bytes: int, config: DMAConfig) -> TransferPlan:
+    """Split ``total_bytes`` into <=max_transaction chunks round-robined
+    over the parallel DMA channels (the DMA Request Mapper's job)."""
+    if total_bytes <= 0:
+        raise ValueError("transfer must move at least one byte")
+    txn = config.max_transaction_bytes
+    offsets = np.arange(0, total_bytes, txn, dtype=np.int64)
+    sizes = np.minimum(txn, total_bytes - offsets).astype(np.int64)
+    channels = (np.arange(offsets.shape[0]) % config.num_parallel_dma
+                ).astype(np.int32)
+    return TransferPlan(channel=channels, offset=offsets, size=sizes,
+                        total_bytes=total_bytes)
+
+
+def modeled_transfer_cycles(
+    plan: TransferPlan,
+    config: DMAConfig,
+    timings: DRAMTimings = DDR4_2400,
+) -> float:
+    """Modeled FPGA cycles for a planned transfer (feeds Fig. 5/8 benches).
+
+    Each transaction streams sequentially (one row activation plus
+    row-buffer-hit bursts); channels overlap ideally up to the DRAM's
+    single-device bandwidth, which we honor by only overlapping the
+    activation latency, not the burst streaming.
+    """
+    bursts = np.ceil(plan.size / timings.burst_bytes)
+    act = (timings.t_rcd + timings.t_cl) * timings.clock_ratio
+    stream = bursts * timings.t_burst * timings.clock_ratio
+    per_channel_act = np.zeros(config.num_parallel_dma)
+    for ch, _ in zip(plan.channel, plan.size):
+        per_channel_act[ch] += act
+    return float(per_channel_act.max() + stream.sum())
+
+
+def bulk_copy(
+    src: jnp.ndarray,
+    *,
+    config: DMAConfig,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Bulk-read ``src`` through the DMA staging path.
+
+    Data plane of the engine: on TPU this runs the double-buffered Pallas
+    ``dma_copy`` kernel; the oracle path streams ``max_transaction``-sized
+    slices (same access pattern, XLA-executed). Returns a fresh copy of
+    ``src`` — the value-level identity is what makes the engine droppable
+    into any model (enable/disable is purely a performance decision).
+    """
+    if use_pallas:
+        from repro.kernels.dma_copy import ops as dma_ops
+        return dma_ops.dma_copy(src, config=config)
+
+    flat = src.reshape(-1)
+    elem_bytes = flat.dtype.itemsize
+    txn_elems = max(1, config.max_transaction_bytes // elem_bytes)
+    n = flat.shape[0]
+    num_txn = -(-n // txn_elems)
+    pad = num_txn * txn_elems - n
+    padded = jnp.pad(flat, (0, pad))
+
+    def copy_txn(carry, i):
+        chunk = jax.lax.dynamic_slice(padded, (i * txn_elems,), (txn_elems,))
+        return carry, chunk
+
+    _, chunks = jax.lax.scan(copy_txn, 0, jnp.arange(num_txn))
+    return chunks.reshape(-1)[:n].reshape(src.shape)
+
+
+def channel_vmem_bytes(config: DMAConfig) -> int:
+    """VMEM claimed by the engine (double-buffered staging per channel) —
+    the TPU analogue of Fig. 5's URAM series."""
+    return 2 * config.num_parallel_dma * config.buffer_bytes

@@ -1,0 +1,5 @@
+"""Data pipeline substrate."""
+
+from repro.data.synthetic import SyntheticDataset, make_batch, batch_specs
+
+__all__ = ["SyntheticDataset", "make_batch", "batch_specs"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the memory-controller hot paths.
+
+Each kernel directory carries ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jitted public wrapper) and ``ref.py`` (pure-jnp oracle used by
+the allclose test sweeps):
+
+* ``bitonic_sort``  — the scheduler's reordering network (paper Fig. 2)
+* ``sorted_gather`` — locality gather; Pallas revisit-skip = row-buffer hit
+* ``cache_lookup``  — set-associative tag/LRU pipelines (paper Fig. 3/4)
+* ``dma_copy``      — multi-channel double-buffered bulk engine (paper §IV-B)
+* ``flash_attention`` — chunked attention; the DMA engine applied to KV streaming
+
+Kernels target TPU (VMEM tiling, async copies); this container validates
+them in ``interpret=True`` mode. Model code dispatches to XLA-path
+equivalents for the CPU dry-run (``use_pallas`` config flag).
+"""

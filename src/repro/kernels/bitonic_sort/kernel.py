@@ -1,0 +1,105 @@
+"""Bitonic sorting network — the scheduler's reordering engine (paper Fig. 2).
+
+TPU adaptation of the FPGA sorting fabric: the FPGA unrolls the network
+*spatially* (one comparator per wire pair); the TPU time-multiplexes the
+``log2(N)(log2(N)+1)/2`` stages onto the 8x128 VPU lanes, each stage being a
+single vectorized compare-exchange over the whole batch held in VMEM. The
+stage count of Eq. 1 is preserved exactly; only the per-stage constant
+changes (one VPU pass instead of one FPGA cycle).
+
+Layout trick: a compare-exchange at stride ``2^j`` is a reshape to
+``(n / 2^(j+1), 2, 2^j)`` followed by elementwise min/max between the two
+middle-axis halves — no gathers, so every stage is pure VPU work.
+
+Stability (the consistency-model requirement that same-address requests
+keep arrival order) is obtained by comparing ``(key, arrival_id)``
+lexicographically; ids are unique, so the network implements a total order
+and the result equals a stable sort by key.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compare_exchange(keys, ids, vals, j_exp: int, k_exp: int):
+    """One network stage: stride 2^j_exp within direction blocks of 2^k_exp."""
+    n = keys.shape[-1]
+    j = 1 << j_exp
+    shape = (n // (2 * j), 2, j)
+
+    def split(x):
+        x = x.reshape(shape)
+        return x[:, 0, :], x[:, 1, :]
+
+    ka, kb = split(keys)
+    ia, ib = split(ids)
+    va, vb = split(vals)
+
+    # Direction of the sub-block each pair lives in: element index of the
+    # pair's first slot is c*2j + t; its K-block is (c*2j) >> k_exp.
+    c = jax.lax.broadcasted_iota(jnp.int32, (shape[0], 1), 0)
+    ascending = ((c * 2 * j) >> k_exp) % 2 == 0
+
+    gt = (ka > kb) | ((ka == kb) & (ia > ib))   # composite (key, id) order
+    swap = jnp.where(ascending, gt, ~gt)
+
+    def merge(a, b):
+        lo = jnp.where(swap, b, a)
+        hi = jnp.where(swap, a, b)
+        return jnp.stack([lo, hi], axis=1).reshape(n)
+
+    return merge(ka, kb), merge(ia, ib), merge(va, vb)
+
+
+def sort_network(keys, ids, vals):
+    """Run the full bitonic network on 1-D int32 arrays (n a power of two)."""
+    n = keys.shape[-1]
+    assert n & (n - 1) == 0, "bitonic network needs a power-of-two batch"
+    m = n.bit_length() - 1
+    for k_exp in range(1, m + 1):
+        for j_exp in range(k_exp - 1, -1, -1):
+            keys, ids, vals = _compare_exchange(keys, ids, vals, j_exp, k_exp)
+    return keys, ids, vals
+
+
+def _sort_kernel(keys_ref, vals_ref, out_keys_ref, out_perm_ref,
+                 out_vals_ref):
+    """Sort one scheduler batch (a grid row) resident in VMEM."""
+    keys = keys_ref[0, :]
+    vals = vals_ref[0, :]
+    n = keys.shape[-1]
+    ids = jax.lax.iota(jnp.int32, n)
+    skeys, sids, svals = sort_network(keys, ids, vals)
+    out_keys_ref[0, :] = skeys
+    out_perm_ref[0, :] = sids
+    out_vals_ref[0, :] = svals
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort_batched(keys: jnp.ndarray, vals: jnp.ndarray,
+                         *, interpret: bool = True):
+    """Sort each row of ``keys (G, N)`` with payload ``vals``; returns
+    (sorted_keys, perm, sorted_vals). N must be a power of two; each grid
+    step sorts one batch entirely in VMEM (the scheduler's double-buffered
+    queue fits VMEM for every Table-I batch size)."""
+    g, n = keys.shape
+    grid = (g,)
+    blk = lambda: pl.BlockSpec((1, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        _sort_kernel,
+        grid=grid,
+        in_specs=[blk(), blk()],
+        out_specs=(blk(), blk(), blk()),
+        out_shape=(
+            jax.ShapeDtypeStruct((g, n), keys.dtype),
+            jax.ShapeDtypeStruct((g, n), jnp.int32),
+            jax.ShapeDtypeStruct((g, n), vals.dtype),
+        ),
+        interpret=interpret,
+    )(keys, vals)

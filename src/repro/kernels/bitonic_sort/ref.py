@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the bitonic sort kernel: a stable key sort."""
+
+import jax.numpy as jnp
+
+
+def sort_with_indices_ref(keys: jnp.ndarray, vals: jnp.ndarray):
+    """Row-wise stable sort; returns (sorted_keys, perm, sorted_vals)."""
+    perm = jnp.argsort(keys, axis=-1, stable=True)
+    sorted_keys = jnp.take_along_axis(keys, perm, axis=-1)
+    sorted_vals = jnp.take_along_axis(vals, perm, axis=-1)
+    return sorted_keys, perm.astype(jnp.int32), sorted_vals

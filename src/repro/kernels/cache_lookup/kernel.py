@@ -1,0 +1,89 @@
+"""Cache-engine tag/LRU pipeline as a Pallas kernel (paper §IV-A, Fig. 3/4).
+
+The FPGA cache engine runs a 4-stage PE pipeline (tag read → compare → LRU
+decision → data access) and a 3-stage MEM fill pipeline sharing Tag RAM,
+Data RAM and LRU state; shared-RAM hazards force one beat at a time. The
+TPU kernel keeps the whole tag store + LRU age matrix in VMEM and walks the
+request batch with a ``fori_loop`` — the sequential loop *is* the shared-RAM
+stall semantics — while each beat's tag compare and LRU scan are vectorized
+across the ways (VPU lanes), like the FPGA comparing all ways in parallel.
+
+The kernel owns metadata only (tags/valid/age → hit?, way). The data path
+(serving hit lines from the VMEM-resident Data RAM, filling victims from
+HBM) is composed around it in ``ops.py`` — mirroring the paper's split
+between the tag pipelines and the Data RAM port.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cache_probe_kernel(line_ids_ref, tags_ref, valid_ref, age_ref,
+                        clock_ref, hits_ref, ways_ref, out_tags_ref,
+                        out_valid_ref, out_age_ref, out_clock_ref):
+    num_sets, _ = tags_ref.shape
+    n = line_ids_ref.shape[0]
+
+    # Copy-in the shared state (Tag RAM / valid bits / LRU ages).
+    out_tags_ref[...] = tags_ref[...]
+    out_valid_ref[...] = valid_ref[...]
+    out_age_ref[...] = age_ref[...]
+
+    def beat(i, clock):
+        line = line_ids_ref[i]
+        set_idx = line % num_sets
+        tag = line // num_sets
+
+        way_tags = out_tags_ref[set_idx, :]
+        way_valid = out_valid_ref[set_idx, :]
+        way_age = out_age_ref[set_idx, :]
+
+        match = (way_valid != 0) & (way_tags == tag)      # parallel compare
+        hit = jnp.any(match)
+        hit_way = jnp.argmax(match)
+        victim = jnp.argmin(way_age)                       # LRU (invalid=-1)
+        way = jnp.where(hit, hit_way, victim).astype(jnp.int32)
+
+        hits_ref[i] = hit.astype(jnp.int32)
+        ways_ref[i] = way
+        out_tags_ref[set_idx, way] = tag
+        out_valid_ref[set_idx, way] = jnp.int32(1)
+        out_age_ref[set_idx, way] = clock + 1   # stamp after advancing
+        return clock + 1
+
+    out_clock_ref[0] = jax.lax.fori_loop(0, n, beat, clock_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_probe(line_ids: jnp.ndarray, tags: jnp.ndarray,
+                valid: jnp.ndarray, age: jnp.ndarray, clock: jnp.ndarray,
+                *, interpret: bool = True):
+    """Run a request batch through the tag/LRU pipeline.
+
+    Returns (hits (N,), way (N,), tags', valid', age', clock'). State
+    arrays are VMEM-resident — even the largest Table III config (32K
+    lines) is <1 MiB of metadata.
+    """
+    n = line_ids.shape[0]
+    sets, ways = tags.shape
+    any_spec = pl.BlockSpec(memory_space=pl.MemorySpace.ANY)
+    return pl.pallas_call(
+        _cache_probe_kernel,
+        in_specs=[any_spec] * 5,
+        out_specs=(any_spec,) * 6,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),          # hits
+            jax.ShapeDtypeStruct((n,), jnp.int32),          # ways
+            jax.ShapeDtypeStruct((sets, ways), jnp.int32),  # tags'
+            jax.ShapeDtypeStruct((sets, ways), jnp.int32),  # valid'
+            jax.ShapeDtypeStruct((sets, ways), jnp.int32),  # age'
+            jax.ShapeDtypeStruct((1,), jnp.int32),          # clock'
+        ),
+        interpret=interpret,
+    )(line_ids.astype(jnp.int32), tags, valid, age,
+      clock.reshape(1).astype(jnp.int32))

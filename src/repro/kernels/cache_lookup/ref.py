@@ -1,0 +1,34 @@
+"""Oracle for the cache-probe kernel: the functional cache engine.
+
+``repro.core.cache_engine.lookup`` (the lax.scan LRU reference) is replayed
+beat-for-beat; the touched way is recovered as the way whose age equals the
+new clock stamp. Tests compare the kernel's metadata trajectory against
+this, and independently against the pure-python ``hit_rate_oracle``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cache_engine import CacheState, lookup
+
+
+def cache_probe_ref(line_ids, tags, valid, age, clock):
+    """Replay the kernel's contract through the core cache engine.
+
+    Returns (hits, ways, tags', valid', age', clock') matching
+    ``kernel.cache_probe``.
+    """
+    state = CacheState(tags=tags, valid=valid != 0, age=age,
+                       data=jnp.zeros((*tags.shape, 1), jnp.float32),
+                       clock=clock.reshape(()))
+    hits, ways = [], []
+    for lid in line_ids:
+        state, hit, _ = lookup(state, lid, jnp.zeros((1,), jnp.float32))
+        set_idx = int(lid) % tags.shape[0]
+        way = int(jnp.argmax(state.age[set_idx] == state.clock))
+        hits.append(int(hit))
+        ways.append(way)
+    return (jnp.asarray(hits, jnp.int32), jnp.asarray(ways, jnp.int32),
+            state.tags, state.valid.astype(jnp.int32), state.age,
+            state.clock.reshape(1))

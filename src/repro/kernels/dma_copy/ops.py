@@ -1,0 +1,28 @@
+"""Public DMA-engine op: shape-agnostic bulk copy through staging buffers.
+
+Chunks the flat payload into ``max_transaction_bytes`` transactions (the
+DMA Request Mapper), pads the tail transaction, and runs the multi-channel
+kernel. Value-identical to a copy of ``src``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import DMAConfig
+from repro.kernels.dma_copy.kernel import dma_copy_chunked
+
+
+def dma_copy(src: jnp.ndarray, *, config: DMAConfig | None = None,
+             interpret: bool = True) -> jnp.ndarray:
+    config = config or DMAConfig()
+    flat = src.reshape(-1)
+    elem = flat.dtype.itemsize
+    chunk_elems = max(128, config.max_transaction_bytes // elem)
+    n = flat.shape[0]
+    num_chunks = max(1, -(-n // chunk_elems))
+    pad = num_chunks * chunk_elems - n
+    staged = jnp.pad(flat, (0, pad)).reshape(num_chunks, chunk_elems)
+    out = dma_copy_chunked(staged, channels=config.num_parallel_dma,
+                           interpret=interpret)
+    return out.reshape(-1)[:n].reshape(src.shape)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: dense masked attention in the model's (B,S,H,hd)
+layout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd). Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v)
+    return o.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for sorted_gather: plain row gather."""
+
+import jax.numpy as jnp
+
+
+def gather_ref(table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, indices, axis=0)

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module can never touch jax device state — required for the dry-run's
+XLA_FLAGS ordering contract.
+
+Topology: one v5e pod contributes a 16x16 (data, model) mesh (256 chips);
+multi-pod prepends a pure-DP ``pod`` axis (2x16x16 = 512 chips). The same
+functions serve the elastic runtime, which re-invokes them with whatever
+device count survives a failure.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices: Optional[Sequence] = None):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"production mesh needs {need} devices, have {len(devices)} "
+            "(dry-run must set --xla_force_host_platform_device_count)")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU distribution tests (8 fake devices)."""
+    need = 1
+    for s in shape:
+        need *= s
+    devs = jax.devices()[:need]
+    return jax.make_mesh(shape, axes, devices=devs)

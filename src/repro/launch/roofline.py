@@ -1,0 +1,174 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Sources:
+  * ``compiled.cost_analysis()`` → HLO FLOPs and HBM bytes accessed.
+  * ``compiled.as_text()`` → post-SPMD per-device HLO; collective bytes are
+    the summed operand sizes of all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute ops (cost_analysis does not report
+    collectives).
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[16,512,448]{2,1,0}" — capture dtype + dims
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^=]*?\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes of the per-device program.
+
+    Post-partitioning HLO references operands by name only, so sizes are
+    derived from each collective's *output* shape and replica-group size g:
+
+      all-gather      operand total = output            (gathered result)
+      all-reduce      operand       = output
+      reduce-scatter  operand       = output x g
+      all-to-all      operand       = output
+      collective-permute operand    = output
+
+    ``-done`` halves of async pairs are skipped (the ``-start`` carries the
+    payload); the start tuple's last element is the result shape.
+    """
+    totals = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind")
+        shapes = [_shape_bytes(sm.group(1), sm.group(2))
+                  for sm in _SHAPE_RE.finditer(m.group("shapes"))]
+        if not shapes:
+            continue
+        if m.group("shapes").startswith("("):
+            if m.group("suffix") == "-start":
+                # (operand_alias, result[, tokens]) — payload = result = max
+                out_bytes = max(shapes)
+            else:
+                out_bytes = sum(shapes)   # tuple collective: sum members
+        else:
+            out_bytes = shapes[0]
+        gm = _GROUPS_RE.search(line)
+        g = int(gm.group(2)) if gm else 1
+        if kind == "reduce-scatter":
+            out_bytes *= g
+        totals[kind] += out_bytes
+    return totals
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    hlo_flops: float              # per-device program FLOPs x chips = global
+    hbm_bytes: float
+    collective_bytes: float       # per-device summed operand bytes
+    collectives_detail: Dict[str, int]
+    model_flops: float            # 6·N·D analytic
+    bytes_per_device: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # collective_bytes is already per-device; each device drives its own
+        # links (4 usable ICI links on a v5e 2D torus).
+        return self.collective_bytes / (4 * ICI_BW_PER_LINK)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=lambda k: terms[k])
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """model-FLOPs time at peak / achievable bound time — the score."""
+        ideal_s = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal_s / max(self.bound_s, 1e-30)
+
+    def row(self) -> str:
+        return (f"| {self.name} | {self.hlo_flops:.3e} | "
+                f"{self.compute_s * 1e3:.2f} | {self.memory_s * 1e3:.2f} | "
+                f"{self.collective_s * 1e3:.2f} | {self.bottleneck} | "
+                f"{self.useful_flops_ratio:.2f} | "
+                f"{self.roofline_fraction:.2f} |")
+
+
+def analyze(name: str, compiled, *, chips: int, model_flops: float,
+            bytes_per_device: Optional[float] = None) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    det = collective_bytes_from_hlo(text)
+    return RooflineReport(
+        name=name, chips=chips,
+        # cost_analysis on the SPMD-partitioned module reports the
+        # per-device program; scale to global.
+        hlo_flops=flops * chips,
+        hbm_bytes=hbm * chips,
+        collective_bytes=float(sum(det.values())),
+        collectives_detail=det,
+        model_flops=model_flops,
+        bytes_per_device=bytes_per_device,
+    )
+
+
+def model_flops_for(cfg, shape, n_params_active: int) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference."""
+    mult = 6.0 if shape.kind == "train" else 2.0
+    tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+    return mult * n_params_active * tokens

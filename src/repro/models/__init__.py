@@ -1,0 +1,5 @@
+"""Model zoo: one LM assembly executing every assigned architecture family."""
+
+from repro.models.lm import LM, build_lm
+
+__all__ = ["LM", "build_lm"]

@@ -1,0 +1,215 @@
+"""Parameter declarations: one tree drives init, sharding specs, and
+abstract (ShapeDtypeStruct) instantiation for the dry-run.
+
+Every parameter is declared once as a ``ParamDecl`` (shape + logical axes +
+initializer). ``init_params`` materializes it, ``param_specs`` maps logical
+axes through the active ``Rules``, and ``abstract_params`` produces
+allocation-free stand-ins — guaranteed tree-congruent because they traverse
+the same declarations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.sharding import Rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | ssm_a | dt_bias
+    fan_in: Optional[int] = None  # scale 1/sqrt(fan_in); default shape[0]
+
+
+def _d(shape, logical, init="normal", fan_in=None):
+    return ParamDecl(tuple(shape), tuple(logical), init, fan_in)
+
+
+def _attn_decls(cfg: ArchConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "ln": _d((d,), (None,), "ones"),
+        "wq": _d((d, h * hd), ("w_fsdp", "w_tp")),
+        "wk": _d((d, kv * hd), ("w_fsdp", "w_tp")),
+        "wv": _d((d, kv * hd), ("w_fsdp", "w_tp")),
+        "wo": _d((h * hd, d), ("w_tp", "w_fsdp")),
+    }
+
+
+def _mlp_decls(cfg: ArchConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "ln": _d((d,), (None,), "ones"),
+        "w_gate": _d((d, f), ("w_fsdp", "w_tp")),
+        "w_up": _d((d, f), ("w_fsdp", "w_tp")),
+        "w_down": _d((f, d), ("w_tp", "w_fsdp")),
+    }
+
+
+def _moe_decls(cfg: ArchConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    decls = {
+        "ln": _d((d,), (None,), "ones"),
+        "router": _d((d, m.num_experts), ("w_fsdp", None)),
+        "w_gate": _d((m.num_experts, d, m.d_expert),
+                     ("expert", "expert_in", "expert_out")),
+        "w_up": _d((m.num_experts, d, m.d_expert),
+                   ("expert", "expert_in", "expert_out")),
+        "w_down": _d((m.num_experts, m.d_expert, d),
+                     ("expert", "expert_out", "expert_in")),
+    }
+    if m.num_shared_experts:
+        fs = m.num_shared_experts * m.shared_d_expert
+        decls.update({
+            "shared_gate": _d((d, fs), ("w_fsdp", "w_tp")),
+            "shared_up": _d((d, fs), ("w_fsdp", "w_tp")),
+            "shared_down": _d((fs, d), ("w_tp", "w_fsdp")),
+        })
+    return decls
+
+
+def mamba_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    return d_in, nheads, s.head_dim, s.d_state
+
+
+def _mamba_decls(cfg: ArchConfig):
+    d = cfg.d_model
+    d_in, nh, _, n = mamba_dims(cfg)
+    return {
+        "ln": _d((d,), (None,), "ones"),
+        "w_zx": _d((d, 2 * d_in), ("w_fsdp", "w_tp")),
+        "w_bc": _d((d, 2 * n), ("w_fsdp", None)),
+        "w_dt": _d((d, nh), ("w_fsdp", "w_tp")),
+        "dt_bias": _d((nh,), ("w_tp",), "dt_bias"),
+        "a_log": _d((nh,), ("w_tp",), "ssm_a"),
+        "d_skip": _d((nh,), ("w_tp",), "ones"),
+        "conv_x": _d((4, d_in), (None, "w_tp"), "normal", 4),
+        "conv_b": _d((4, n), (None, None), "normal", 4),
+        "conv_c": _d((4, n), (None, None), "normal", 4),
+        "gated_ln": _d((d_in,), ("w_tp",), "ones"),
+        "wo": _d((d_in, d), ("w_tp", "w_fsdp")),
+    }
+
+
+def block_decls(cfg: ArchConfig, layer_in_period: int):
+    """Declarations for one (mixer, ffn) sub-block at a period position."""
+    mixer, ffn = cfg.layer_kinds(layer_in_period)
+    decls = {}
+    if mixer == "attn":
+        decls["attn"] = _attn_decls(cfg)
+    elif mixer == "mamba":
+        decls["mamba"] = _mamba_decls(cfg)
+    if ffn == "mlp":
+        decls["mlp"] = _mlp_decls(cfg)
+    elif ffn == "moe":
+        decls["moe"] = _moe_decls(cfg)
+    return decls
+
+
+def model_decls(cfg: ArchConfig):
+    """Full declaration tree. Per-layer decls get a leading stacked 'layers'
+    axis (num_groups = num_layers / scan period) for lax.scan."""
+    period = cfg.scan_period
+    assert cfg.num_layers % period == 0
+    groups = cfg.num_layers // period
+
+    def stack(decl: ParamDecl) -> ParamDecl:
+        # Pin fan-in to the *unstacked* input dim so the scan axis never
+        # changes init scale.
+        fan_in = decl.fan_in
+        if decl.init == "normal" and fan_in is None:
+            fan_in = decl.shape[-2] if len(decl.shape) >= 2 else decl.shape[-1]
+        return ParamDecl((groups,) + decl.shape, ("layers",) + decl.logical,
+                         decl.init, fan_in)
+
+    layers = {}
+    for pos in range(period):
+        layers[f"pos{pos}"] = jax.tree.map(
+            stack, block_decls(cfg, pos),
+            is_leaf=lambda x: isinstance(x, ParamDecl))
+
+    tree = {
+        "embed": {"table": _d((cfg.padded_vocab, cfg.d_model),
+                              (None, "w_tp"), "normal", cfg.d_model)},
+        "layers": layers,
+        "final_norm": _d((cfg.d_model,), (None,), "ones"),
+        "lm_head": _d((cfg.d_model, cfg.padded_vocab),
+                      ("w_fsdp", "w_vocab_tp")),
+    }
+    if cfg.modality in ("audio", "vision_text"):
+        tree["connector"] = {
+            "w": _d((cfg.frontend_dim, cfg.d_model), ("w_fsdp", None)),
+            "ln": _d((cfg.d_model,), (None,), "ones"),
+        }
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Materialization
+# ---------------------------------------------------------------------------
+
+def _is_decl(x):
+    return isinstance(x, ParamDecl)
+
+
+def _init_leaf(decl: ParamDecl, key, dtype):
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, dtype)
+    if decl.init == "ssm_a":
+        # A in [1, 16], stored as log (mamba2 default init)
+        u = jax.random.uniform(key, decl.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(jnp.float32)      # keep fp32 (sensitive)
+    if decl.init == "dt_bias":
+        # inverse-softplus of dt ~ LogUniform[1e-3, 1e-1]
+        dt = jnp.exp(jax.random.uniform(key, decl.shape, jnp.float32,
+                                        math.log(1e-3), math.log(1e-1)))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32)
+    fan_in = decl.fan_in or (decl.shape[-2] if len(decl.shape) >= 2
+                             else decl.shape[-1])
+    scale = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, decl.shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_params(cfg: ArchConfig, key):
+    decls = model_decls(cfg)
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(d, k, dtype) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    def to_abstract(d: ParamDecl):
+        dt = jnp.float32 if d.init in ("ssm_a", "dt_bias") else dtype
+        return jax.ShapeDtypeStruct(d.shape, dt)
+
+    return jax.tree.map(to_abstract, model_decls(cfg), is_leaf=_is_decl)
+
+
+def param_specs(cfg: ArchConfig, rules: Rules):
+    return jax.tree.map(lambda d: rules.spec(*d.logical), model_decls(cfg),
+                        is_leaf=_is_decl)
+
+
+def param_count_tree(cfg: ArchConfig) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(
+        model_decls(cfg), is_leaf=_is_decl))

@@ -1,0 +1,10 @@
+"""Optimizer substrate: sharded AdamW + schedules + gradient compression."""
+
+from repro.optim.adamw import (OptimizerConfig, adamw_update, init_opt_state,
+                               opt_state_specs, lr_schedule)
+from repro.optim.compress import (compress_int8, decompress_int8,
+                                  compressed_psum)
+
+__all__ = ["OptimizerConfig", "adamw_update", "init_opt_state",
+           "opt_state_specs", "lr_schedule", "compress_int8",
+           "decompress_int8", "compressed_psum"]

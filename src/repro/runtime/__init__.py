@@ -1,0 +1,6 @@
+"""Runtime substrate: straggler watchdog + elastic mesh management."""
+
+from repro.runtime.elastic import elastic_mesh_shape, plan_rescale
+from repro.runtime.watchdog import StepWatchdog
+
+__all__ = ["StepWatchdog", "elastic_mesh_shape", "plan_rescale"]

@@ -1,0 +1,17 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here by design — unit tests and
+benches must see the real single CPU device; multi-device distribution
+tests spawn subprocesses with their own flags."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,59 @@
+"""Cache engine (functional scan LRU) behavioural tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_engine import (hit_rate_oracle, init_cache,
+                                     simulate_trace)
+from repro.core.config import CacheConfig
+
+
+def test_trace_serves_correct_lines(rng):
+    cfg = CacheConfig(num_lines=256, associativity=2)
+    table = jnp.asarray(rng.standard_normal((1024, 4)), jnp.float32)
+    lids = jnp.asarray(rng.integers(0, 1024, 200), jnp.int32)
+    st0 = init_cache(cfg, 4)
+    _, hits, lines = simulate_trace(st0, lids, table)
+    np.testing.assert_allclose(np.asarray(lines), np.asarray(table[lids]))
+
+
+def test_repeat_access_hits():
+    cfg = CacheConfig(num_lines=256, associativity=4)
+    table = jnp.ones((512, 4))
+    lids = jnp.asarray([7, 7, 7, 7], jnp.int32)
+    _, hits, _ = simulate_trace(init_cache(cfg, 4), lids, table)
+    np.testing.assert_array_equal(np.asarray(hits), [False, True, True,
+                                                     True])
+
+
+def test_direct_mapped_conflict_misses():
+    """ways=1: two lines mapping to the same set always evict each other."""
+    cfg = CacheConfig(num_lines=256, associativity=1)
+    sets = cfg.num_sets
+    table = jnp.ones((4 * sets, 4))
+    lids = jnp.asarray([5, 5 + sets, 5, 5 + sets], jnp.int32)
+    _, hits, _ = simulate_trace(init_cache(cfg, 4), lids, table)
+    assert not np.asarray(hits).any()
+
+
+def test_higher_associativity_never_hurts_this_workload(rng):
+    lids = rng.integers(0, 2048, 2000)
+    rates = []
+    for ways in (1, 2, 4, 8):
+        cfg = CacheConfig(num_lines=1024, associativity=ways)
+        _, rate = hit_rate_oracle(cfg, lids)
+        rates.append(rate)
+    assert rates == sorted(rates) or max(rates) - min(rates) < 0.02
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=80))
+def test_property_scan_matches_python_oracle(lids):
+    cfg = CacheConfig(num_lines=256, associativity=4)
+    table = jnp.zeros((1024, 2))
+    _, hits, _ = simulate_trace(init_cache(cfg, 2),
+                                jnp.asarray(lids, jnp.int32), table)
+    hits_py, _ = hit_rate_oracle(cfg, np.asarray(lids))
+    np.testing.assert_array_equal(np.asarray(hits), hits_py)

@@ -1,0 +1,83 @@
+"""Controller value-identity contract: engines may only change performance,
+never results — the property that makes them paper-style 'plug and play'."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HotRowCache, MemoryController, PAPER_EVAL_CONFIG,
+                        sorted_gather)
+from repro.core.autotune import tune
+from repro.core.config import (CacheConfig, DMAConfig,
+                               MemoryControllerConfig, SchedulerConfig)
+
+
+def _cfg(sched=True, cache=True, dma=True):
+    return MemoryControllerConfig(
+        scheduler=SchedulerConfig(enabled=sched),
+        cache=CacheConfig(enabled=cache),
+        dma=DMAConfig(enabled=dma))
+
+
+@pytest.mark.parametrize("sched", [True, False])
+@pytest.mark.parametrize("cache", [True, False])
+def test_gather_identity_across_engine_configs(sched, cache, rng):
+    mc = MemoryController(_cfg(sched=sched, cache=cache))
+    table = jnp.asarray(rng.standard_normal((128, 16)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 128, (4, 9)), jnp.int32)
+    out = mc.gather(table, idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(table[idx]))
+
+
+def test_hot_row_cache_identity(rng):
+    table = jnp.asarray(rng.standard_normal((256, 8)), jnp.float32)
+    cache = HotRowCache.build(table, hot_ids=rng.choice(256, 32,
+                                                        replace=False))
+    mc = MemoryController(_cfg())
+    idx = jnp.asarray(rng.integers(0, 256, 100), jnp.int32)
+    out = mc.cached_gather(table, idx, cache)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(table[idx]))
+    # hot ids actually hit
+    hot_idx = jnp.asarray(np.asarray(cache.hot_ids)[:5])
+    assert bool(cache.hit_mask(hot_idx).all())
+
+
+def test_bulk_read_identity(rng):
+    mc = MemoryController(PAPER_EVAL_CONFIG)
+    x = jnp.asarray(rng.standard_normal((64, 100)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(mc.bulk_read(x)), np.asarray(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=200))
+def test_property_sorted_gather_identity(ids):
+    table = jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4)
+    idx = jnp.asarray(ids, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(sorted_gather(table, idx)), np.asarray(table[idx]))
+
+
+def test_modeled_gather_time_improves_with_scheduler(rng):
+    rows = rng.integers(0, 256, 2048)
+    on = MemoryController(_cfg(sched=True)).modeled_gather_time(rows, 512)
+    off = MemoryController(_cfg(sched=False)).modeled_gather_time(rows, 512)
+    assert on.total_fpga_cycles <= off.total_fpga_cycles
+
+
+def test_autotune_respects_vmem_budget(rng):
+    res = tune(rng.integers(0, 4096, 1024), 512,
+               vmem_budget_bytes=1 << 20,
+               batch_sizes=(16, 64), associativities=(1, 4),
+               num_lines=(1024, 16384), dma_channels=(1,))
+    assert res.config.vmem_footprint_bytes() <= 1 << 20
+    assert res.candidates_evaluated > 0
+
+
+def test_autotune_rejects_impossible_budget(rng):
+    with pytest.raises(ValueError):
+        tune(rng.integers(0, 64, 64), 512, vmem_budget_bytes=16,
+             batch_sizes=(16,), associativities=(1,), num_lines=(1024,),
+             dma_channels=(1,))

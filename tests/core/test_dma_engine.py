@@ -1,0 +1,72 @@
+"""DMA engine planner properties + windowed-baseline simulator checks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.config import DMAConfig
+from repro.core.dma_engine import (channel_vmem_bytes,
+                                   modeled_transfer_cycles, plan_transfer)
+from repro.core.timing import (DDR4_2400, simulate_dram_access,
+                               simulate_dram_access_windowed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 10_000_000), st.integers(1, 8),
+       st.sampled_from([256, 4096, 65536]))
+def test_plan_covers_payload_exactly(total, channels, txn):
+    plan = plan_transfer(total, DMAConfig(num_parallel_dma=channels,
+                                          max_transaction_bytes=txn))
+    assert plan.size.sum() == total
+    # transactions tile the payload without gaps or overlap
+    order = np.argsort(plan.offset)
+    offs, sizes = plan.offset[order], plan.size[order]
+    assert offs[0] == 0
+    np.testing.assert_array_equal(offs[1:], (offs + sizes)[:-1])
+    assert plan.size.max() <= txn
+    assert set(plan.channel.tolist()) <= set(range(channels))
+
+
+def test_channels_round_robin():
+    plan = plan_transfer(10 * 1024, DMAConfig(num_parallel_dma=4,
+                                              max_transaction_bytes=1024))
+    np.testing.assert_array_equal(plan.channel,
+                                  np.arange(10) % 4)
+
+
+def test_more_channels_reduce_modeled_time():
+    cfg1 = DMAConfig(num_parallel_dma=1, max_transaction_bytes=4096)
+    cfg8 = DMAConfig(num_parallel_dma=8, max_transaction_bytes=4096)
+    plan1 = plan_transfer(1 << 20, cfg1)
+    plan8 = plan_transfer(1 << 20, cfg8)
+    assert modeled_transfer_cycles(plan8, cfg8) < \
+        modeled_transfer_cycles(plan1, cfg1)
+    assert channel_vmem_bytes(cfg8) == 8 * channel_vmem_bytes(cfg1)
+
+
+def test_plan_rejects_empty():
+    with pytest.raises(ValueError):
+        plan_transfer(0, DMAConfig())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=300))
+def test_windowed_sim_window1_equals_fifo(rows):
+    """The MIG-like baseline at window=1 must match the pure FIFO
+    simulator on every trace (same hit/conflict classification)."""
+    addrs = np.asarray(rows, np.int64) * DDR4_2400.row_bytes
+    fifo = simulate_dram_access(addrs)
+    w1 = simulate_dram_access_windowed(addrs, window=1)
+    assert (fifo.row_hits, fifo.row_conflicts, fifo.first_accesses) == \
+        (w1.row_hits, w1.row_conflicts, w1.first_accesses)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 31), min_size=2, max_size=200),
+       st.sampled_from([2, 4, 8]))
+def test_windowed_reorder_never_hurts(rows, window):
+    """Greedy open-row promotion can only reduce total cycles."""
+    addrs = np.asarray(rows, np.int64) * DDR4_2400.row_bytes
+    fifo = simulate_dram_access_windowed(addrs, window=1)
+    win = simulate_dram_access_windowed(addrs, window=window)
+    assert win.total_fpga_cycles <= fifo.total_fpga_cycles + 1e-9

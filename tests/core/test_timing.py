@@ -1,0 +1,66 @@
+"""Timing model: Eq. 1-3 values and DRAM-simulator properties (paper §IV)."""
+
+import numpy as np
+import pytest
+
+from repro.core.config import (MemoryControllerConfig, SchedulerConfig,
+                               scheduler_sort_stages)
+from repro.core.timing import (DDR4_2400, DRAMTimings, simulate_dram_access,
+                               t_cache_trace, t_dma_transfer, t_schedule)
+
+
+def test_eq1_schedule_time():
+    # T_sch = N + log2(N)(log2(N)+1)/2 + L_cond
+    assert t_schedule(64, 2) == 64 + 6 * 7 / 2 + 2
+    assert t_schedule(4, 2) == 4 + 2 * 3 / 2 + 2
+    assert scheduler_sort_stages(128) == 7 * 8 // 2
+
+
+def test_derived_dram_averages():
+    t = DDR4_2400
+    # T_mem_seq = T_cl * T_mem / T_fpga ; T_mem_rand adds rp+rcd
+    np.testing.assert_allclose(t.t_mem_seq(), 17 * 0.833 / 3.333, rtol=1e-6)
+    np.testing.assert_allclose(
+        t.t_mem_rand(), (17 + 17 + 17) * 0.833 / 3.333, rtol=1e-6)
+    # paper: row hits save 2-3x vs conflicts
+    assert 2.0 <= t.t_mem_rand() / t.t_mem_seq() <= 3.0 + 1e-9
+
+
+def test_sequential_beats_random_access():
+    seq = np.arange(4096) * 64                      # walks rows in order
+    rnd = np.random.default_rng(0).integers(0, 1 << 24, 4096) * 64
+    r_seq = simulate_dram_access(seq)
+    r_rnd = simulate_dram_access(rnd)
+    assert r_seq.total_fpga_cycles < r_rnd.total_fpga_cycles
+    assert r_seq.hit_rate > 0.9
+    assert r_rnd.hit_rate < 0.2
+
+
+def test_same_row_stream_is_all_hits():
+    addrs = np.full(100, 8192 * 3) + np.arange(100) % 64
+    r = simulate_dram_access(addrs)
+    assert r.row_hits == 99 and r.first_accesses == 1
+
+
+def test_eq2_cache_trace_hits_cheaper():
+    cfg = MemoryControllerConfig()
+    all_hits = t_cache_trace(cfg, np.ones(100, bool), t_mem_access=20.0)
+    all_miss = t_cache_trace(cfg, np.zeros(100, bool), t_mem_access=20.0)
+    assert all_hits < all_miss
+
+
+def test_eq3_dma_seq_vs_rand_and_channels():
+    cfg1 = MemoryControllerConfig()
+    seq = t_dma_transfer(cfg1, 256, np.ones(256, bool))
+    rnd = t_dma_transfer(cfg1, 256, np.zeros(256, bool))
+    assert seq < rnd
+    import dataclasses
+    from repro.core.config import DMAConfig
+    cfg8 = dataclasses.replace(cfg1, dma=DMAConfig(num_parallel_dma=8))
+    assert t_dma_transfer(cfg8, 256, np.zeros(256, bool)) < rnd
+
+
+def test_dma_exclusive_access_type():
+    cfg = MemoryControllerConfig()
+    with pytest.raises(ValueError):
+        t_dma_transfer(cfg, 10, np.ones(5, bool))   # wrong mask length

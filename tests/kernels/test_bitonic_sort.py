@@ -1,0 +1,80 @@
+"""Bitonic-sort kernel vs stable-sort oracle: sweeps + properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bitonic_sort import ops, ref
+from repro.kernels.bitonic_sort.kernel import sort_network
+import jax
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 64, 128, 512])
+@pytest.mark.parametrize("key_range", [4, 1000])
+def test_matches_stable_sort(n, key_range, rng):
+    keys = jnp.asarray(rng.integers(0, key_range, n), jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 10_000, n), jnp.int32)
+    sk, perm, sv = ops.sort_with_indices(keys, vals)
+    rk, rperm, rv = ref.sort_with_indices_ref(keys, vals)
+    np.testing.assert_array_equal(sk, rk)
+    np.testing.assert_array_equal(perm, rperm)   # stability ⇒ perm identical
+    np.testing.assert_array_equal(sv, rv)
+
+
+@pytest.mark.parametrize("n", [3, 5, 33, 100, 250])
+def test_non_power_of_two_padding(n, rng):
+    keys = jnp.asarray(rng.integers(0, 7, n), jnp.int32)
+    sk, perm = ops.sort_with_indices(keys)
+    rk, rperm, _ = ref.sort_with_indices_ref(keys, jnp.zeros_like(keys))
+    np.testing.assert_array_equal(sk, rk)
+    np.testing.assert_array_equal(perm, rperm)
+
+
+def test_batched_rows_sort_independently(rng):
+    keys = jnp.asarray(rng.integers(0, 50, (7, 64)), jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 9, (7, 64)), jnp.int32)
+    sk, perm, sv = ops.sort_with_indices(keys, vals)
+    rk, rperm, rv = ref.sort_with_indices_ref(keys, vals)
+    np.testing.assert_array_equal(sk, rk)
+    np.testing.assert_array_equal(perm, rperm)
+    np.testing.assert_array_equal(sv, rv)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 15), min_size=2, max_size=128))
+def test_property_sorted_permutation_stable(xs):
+    """The output is (a) sorted, (b) a permutation, (c) stable on ties."""
+    keys = jnp.asarray(xs, jnp.int32)
+    sk, perm = ops.sort_with_indices(keys)
+    sk, perm = np.asarray(sk), np.asarray(perm)
+    assert (np.diff(sk) >= 0).all()                      # sorted
+    assert sorted(perm.tolist()) == list(range(len(xs)))  # permutation
+    # stability: among equal keys, original indices ascend
+    for k in set(xs):
+        idx = perm[sk == k]
+        assert (np.diff(idx) > 0).all()
+
+
+def test_network_stage_count_matches_eq1():
+    """The network runs exactly log2(N)(log2(N)+1)/2 stages (Eq. 1 term)."""
+    from repro.core.config import scheduler_sort_stages
+    count = 0
+    orig = __import__("repro.kernels.bitonic_sort.kernel",
+                      fromlist=["_compare_exchange"])._compare_exchange
+
+    def counting(*args, **kw):
+        nonlocal count
+        count += 1
+        return orig(*args, **kw)
+
+    import repro.kernels.bitonic_sort.kernel as km
+    km_orig = km._compare_exchange
+    km._compare_exchange = counting
+    try:
+        n = 64
+        keys = jnp.arange(n, dtype=jnp.int32)
+        sort_network(keys, keys, keys)
+    finally:
+        km._compare_exchange = km_orig
+    assert count == scheduler_sort_stages(64)

@@ -1,0 +1,61 @@
+"""Roofline machinery: HLO collective parser + term math."""
+
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (RooflineReport, collective_bytes_from_hlo,
+                                   model_flops_for)
+from repro.configs import SHAPES, get_arch
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = f32[1024,64]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256]T(1,0), dimensions={0}
+  %ar = bf16[512,128]{1,0} all-reduce(%y), replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = f32[64,64]{1,0} reduce-scatter(%z), replica_groups=[16,16]<=[256], dimensions={0}
+  %a2a = bf16[32,32]{1,0} all-to-all(%w), replica_groups=[16,16]<=[256]
+  %cp = f32[16,16]{1,0} collective-permute(%v), source_target_pairs={{0,1}}
+  %ags = (f32[8,8]{1,0}, f32[128,8]{1,0}) all-gather-start(%u), replica_groups=[16,16]<=[256], dimensions={0}
+  %agd = f32[128,8]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_collective_parser_kinds_and_sizes():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["all-gather"] == 1024 * 64 * 4 + 128 * 8 * 4  # plain + start
+    assert out["all-reduce"] == 512 * 128 * 2
+    assert out["reduce-scatter"] == 64 * 64 * 4 * 16         # out x group
+    assert out["all-to-all"] == 32 * 32 * 2
+    assert out["collective-permute"] == 16 * 16 * 4
+
+
+def test_parser_skips_done_ops():
+    out = collective_bytes_from_hlo(
+        "%d = f32[128,8]{1,0} all-gather-done(%s)\n")
+    assert out["all-gather"] == 0
+
+
+def test_report_terms_and_bottleneck():
+    r = RooflineReport(name="t", chips=256, hlo_flops=1e18,
+                       hbm_bytes=1e15, collective_bytes=1e9,
+                       collectives_detail={}, model_flops=5e17)
+    np.testing.assert_allclose(r.compute_s, 1e18 / (256 * 197e12))
+    np.testing.assert_allclose(r.memory_s, 1e15 / (256 * 819e9))
+    np.testing.assert_allclose(r.collective_s, 1e9 / (4 * 50e9))
+    assert r.bottleneck == "compute"
+    np.testing.assert_allclose(r.useful_flops_ratio, 0.5)
+    assert 0 < r.roofline_fraction <= 1.0
+
+
+def test_model_flops_semantics():
+    cfg = get_arch("yi-34b")
+    n = cfg.active_param_count()
+    train = model_flops_for(cfg, SHAPES["train_4k"], n)
+    decode = model_flops_for(cfg, SHAPES["decode_32k"], n)
+    np.testing.assert_allclose(train, 6 * n * SHAPES["train_4k"].tokens)
+    np.testing.assert_allclose(decode, 2 * n * 128)   # one token per seq
+
+
+def test_moe_active_params_below_total():
+    q = get_arch("qwen2-moe-a2.7b")
+    assert q.active_param_count() < 0.35 * q.param_count()

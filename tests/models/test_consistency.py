@@ -1,0 +1,150 @@
+"""Cross-path consistency: decode-with-cache == cache-free forward,
+chunked SSD == stepwise recurrence, flash == naive attention, ring-buffer
+SWA cache == dense windowed attention."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import build_lm
+from repro.models.layers import decode_attention, flash_attention
+
+DECODABLE = [a for a in ARCH_IDS if a != "hubert_xlarge"]
+
+
+def _f32(cfg):
+    reps = {"param_dtype": "float32"}
+    if cfg.moe is not None:
+        reps["moe"] = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    return dataclasses.replace(cfg, **reps)
+
+
+@pytest.mark.parametrize("arch", DECODABLE)
+def test_decode_matches_full_forward(arch, key):
+    cfg = _f32(get_arch(arch, smoke=True))
+    lm = build_lm(cfg)
+    params = lm.init(key)
+    B, S = 2, 32
+    if cfg.modality == "vision_text":
+        st = S + 1 - cfg.num_vision_tokens
+        vis = jax.random.normal(jax.random.key(7),
+                                (B, cfg.num_vision_tokens,
+                                 cfg.frontend_dim), jnp.float32)
+        toks = jax.random.randint(key, (B, st), 0, cfg.vocab_size)
+        full = {"tokens": toks, "vision_embeds": vis}
+        pre = {"tokens": toks[:, :-1], "vision_embeds": vis}
+        last = toks[:, -1]
+    else:
+        toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+        full = {"tokens": toks}
+        pre = {"tokens": toks[:, :S]}
+        last = toks[:, S]
+    want = lm.forward(params, full)[0][:, -1, :cfg.vocab_size]
+    _, cache, cur = lm.prefill(params, pre, max_len=S + 8)
+    got, _ = lm.decode_step(params, last, cache, cur)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["mamba2_2p7b", "h2o_danube_1p8b",
+                                  "mixtral_8x7b"])
+def test_multi_step_decode_matches_full(arch, key):
+    """Decode 4 tokens sequentially; each must match the cache-free model."""
+    cfg = _f32(get_arch(arch, smoke=True))
+    lm = build_lm(cfg)
+    params = lm.init(key)
+    B, S, K = 2, 24, 4
+    toks = jax.random.randint(key, (B, S + K), 0, cfg.vocab_size)
+    _, cache, cur = lm.prefill(params, {"tokens": toks[:, :S]},
+                               max_len=S + K + 8)
+    for t in range(K):
+        want = lm.forward(
+            params, {"tokens": toks[:, :S + t + 1]})[0][:, -1,
+                                                        :cfg.vocab_size]
+        got, cache = lm.decode_step(params, toks[:, S + t], cache, cur)
+        cur = cur + 1
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-3, rtol=1e-3,
+                                   err_msg=f"token {t}")
+
+
+def _naive_attention(q, k, v, causal=True, window=None):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k) / np.sqrt(hd)
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool) if not causal else pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v)
+    return o.reshape(B, S, H, hd)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("blocks", [(8, 16), (64, 64), (16, 128)])
+def test_flash_matches_naive(causal, blocks, key):
+    B, S, H, KV, hd = 2, 64, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = flash_attention(q, k, v, causal=causal, q_block=blocks[0],
+                          kv_block=blocks[1])
+    want = _naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [4, 16, 64])
+def test_flash_swa_matches_naive(window, key):
+    B, S, H, KV, hd = 1, 48, 4, 4, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          q_block=16, kv_block=16)
+    want = _naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_matches_last_row_of_full(key):
+    B, S, H, KV, hd = 2, 33, 4, 2, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    full = _naive_attention(q, k, v, causal=True)[:, -1]
+    got = decode_attention(q[:, -1], k, v,
+                           jnp.ones((B, S), bool))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ssd_chunk_size_invariance(key):
+    """Chunked SSD must give identical results for any chunk size."""
+    from repro.models import blocks as blk
+    cfg = _f32(get_arch("mamba2_2p7b", smoke=True))
+    lm = build_lm(cfg)
+    params = lm.init(key)
+    p = jax.tree.map(lambda t: t[0], params["layers"]["pos0"]["mamba"])
+    x = jax.random.normal(key, (2, 32, cfg.d_model), jnp.float32)
+    outs = []
+    for chunk in (4, 8, 16, 32):
+        c = dataclasses.replace(cfg,
+                                ssm=dataclasses.replace(cfg.ssm,
+                                                        chunk=chunk))
+        out, _ = blk.mamba_forward(p, x, c, lm.rules, None)
+        outs.append(np.asarray(out, np.float32))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-4)

@@ -1,0 +1,56 @@
+"""Runtime: straggler watchdog + elastic rescale planning."""
+
+import time
+
+import pytest
+
+from repro.runtime import StepWatchdog, elastic_mesh_shape, plan_rescale
+
+
+def test_watchdog_flags_persistent_straggler():
+    wd = StepWatchdog(window=20, threshold=2.0, patience=2)
+    # baseline: fast steps
+    for s in range(10):
+        wd.start()
+        wd._t0 -= 0.01        # simulate 10ms without sleeping
+        wd.stop(s)
+    # two consecutive slow steps -> alert on the second
+    wd.start(); wd._t0 -= 0.1; assert wd.stop(10) is None
+    wd.start(); wd._t0 -= 0.1; alert = wd.stop(11)
+    assert alert is not None and alert.ratio > 2.0
+
+
+def test_watchdog_ignores_single_blip():
+    wd = StepWatchdog(window=20, threshold=2.0, patience=2)
+    for s in range(10):
+        wd.start(); wd._t0 -= 0.01; wd.stop(s)
+    wd.start(); wd._t0 -= 0.2; assert wd.stop(10) is None   # one blip
+    wd.start(); wd._t0 -= 0.01; assert wd.stop(11) is None  # recovered
+    assert wd.alerts == []
+
+
+def test_elastic_preserves_model_axis():
+    assert elastic_mesh_shape(512, 16, pods=2) == (2, 16, 16)
+    assert elastic_mesh_shape(256, 16) == (16, 16)
+    # lose 3 hosts (12 chips): data shrinks, model survives
+    assert elastic_mesh_shape(244, 16) == (15, 16)
+
+
+def test_elastic_refuses_to_shrink_tp():
+    with pytest.raises(ValueError):
+        elastic_mesh_shape(8, 16)
+
+
+def test_plan_rescale_accumulates_to_preserve_batch():
+    plan = plan_rescale((16, 16), ("data", "model"),
+                        available_devices=128, global_batch=256)
+    assert plan.new_shape == (8, 16)
+    assert plan.grad_accum == 2          # half the DP -> 2x accumulation
+    assert plan.dropped_devices == 0
+
+
+def test_plan_rescale_drops_dead_pod():
+    plan = plan_rescale((2, 16, 16), ("pod", "data", "model"),
+                        available_devices=256, global_batch=256)
+    assert plan.new_shape == (16, 16)
+    assert plan.grad_accum == 2

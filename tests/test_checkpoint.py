@@ -1,0 +1,80 @@
+"""Checkpoint store: roundtrip, atomicity, retention, exotic dtypes."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              load_checkpoint, save_checkpoint)
+
+
+def _tree(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "params": {"w": jax.random.normal(ks[0], (8, 4), jnp.bfloat16),
+                   "b": jax.random.normal(ks[1], (4,), jnp.float32)},
+        "opt": {"m": jnp.zeros((8, 4)), "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip_including_bf16(tmp_path, key):
+    tree = _tree(key)
+    save_checkpoint(str(tmp_path), 7, tree)
+    back = load_checkpoint(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step_ignores_partial(tmp_path, key):
+    tree = _tree(key)
+    save_checkpoint(str(tmp_path), 5, tree)
+    save_checkpoint(str(tmp_path), 10, tree)
+    # simulate a crash mid-save: tmp dir without manifest
+    os.makedirs(tmp_path / "step_99.tmp")
+    (tmp_path / "step_99.tmp" / "junk.npy").write_bytes(b"x")
+    # and a finalized-looking dir without manifest
+    os.makedirs(tmp_path / "step_50")
+    assert latest_step(str(tmp_path)) == 10
+
+
+def test_missing_leaf_raises(tmp_path, key):
+    tree = _tree(key)
+    save_checkpoint(str(tmp_path), 1, tree)
+    bigger = {**tree, "extra": jnp.zeros((2,))}
+    with pytest.raises(ValueError, match="missing leaves"):
+        load_checkpoint(str(tmp_path), 1, bigger)
+
+
+def test_manager_retention_and_async(tmp_path, key):
+    tree = _tree(key)
+    mgr = CheckpointManager(str(tmp_path), save_every=2, keep=2)
+    for step in range(1, 9):
+        mgr.maybe_save(step, tree)
+    mgr.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    assert steps == [6, 8]
+
+
+def test_restore_latest_roundtrip(tmp_path, key):
+    tree = _tree(key)
+    mgr = CheckpointManager(str(tmp_path), save_every=1)
+    mgr.maybe_save(3, tree)
+    mgr.wait()
+    step, back = mgr.restore_latest(tree)
+    assert step == 3
+    np.testing.assert_array_equal(
+        np.asarray(back["params"]["w"], np.float32),
+        np.asarray(tree["params"]["w"], np.float32))
+
+
+def test_restore_latest_none_when_empty(tmp_path, key):
+    mgr = CheckpointManager(str(tmp_path))
+    step, back = mgr.restore_latest(_tree(key))
+    assert step is None and back is None
