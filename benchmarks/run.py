@@ -7,6 +7,7 @@ probe reproduces one published artifact:
   fig5    — DMA engine resource utilization             (Fig. 5)
   fig6    — scheduler cost vs batch size + Eq. 1        (Fig. 6)
   fig7    — GCN 27% / CNN 58% access-time improvement   (Fig. 7)
+  fig7w   — write-heavy streams (embed-grad, KV append) (Fig. 7 ext.)
   fig8    — interface-width sweep, 20x DMA advantage    (Fig. 8)
   fig9    — schedule-time breakdown, 32-64 optimum      (Fig. 9)
   autotune— TUNE-parameter search convergence           (§II, Table I)
@@ -14,8 +15,8 @@ probe reproduces one published artifact:
 
 from benchmarks import (autotune_bench, fig5_dma_resources,
                         fig6_scheduler_cost, fig7_workloads,
-                        fig8_interface_width, fig9_schedule_time,
-                        table3_cache_resources)
+                        fig7_write_workloads, fig8_interface_width,
+                        fig9_schedule_time, table3_cache_resources)
 
 
 def main() -> None:
@@ -24,6 +25,7 @@ def main() -> None:
     fig5_dma_resources.run()
     fig6_scheduler_cost.run()
     fig7_workloads.run()
+    fig7_write_workloads.run()
     fig8_interface_width.run()
     fig9_schedule_time.run()
     autotune_bench.run()

@@ -9,14 +9,15 @@ the paper-claim reproductions.
 from repro.core.config import (CacheConfig, DMAConfig, MemoryControllerConfig,
                                PAPER_EVAL_CONFIG, SchedulerConfig)
 from repro.core.controller import (HotRowCache, MemoryController,
-                                   sorted_gather)
+                                   sorted_gather, sorted_scatter)
 from repro.core.timing import (DDR4_2400, DRAMTimings, HBM_V5E,
                                roofline_time_s, simulate_dram_access,
-                               t_schedule)
+                               t_schedule, turnaround_cycles)
 
 __all__ = [
     "CacheConfig", "DMAConfig", "MemoryControllerConfig", "SchedulerConfig",
     "PAPER_EVAL_CONFIG", "HotRowCache", "MemoryController", "sorted_gather",
-    "DDR4_2400", "HBM_V5E", "DRAMTimings", "roofline_time_s",
-    "simulate_dram_access", "t_schedule",
+    "sorted_scatter", "DDR4_2400", "HBM_V5E", "DRAMTimings",
+    "roofline_time_s", "simulate_dram_access", "t_schedule",
+    "turnaround_cycles",
 ]

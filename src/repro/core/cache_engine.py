@@ -23,17 +23,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import scatter_util
 from repro.core.config import CacheConfig
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class CacheState:
-    """Tag RAM + Data RAM + LRU age matrix, as arrays.
+    """Tag RAM + Data RAM + LRU age matrix + dirty bits, as arrays.
 
     ``age`` holds the global access stamp of each way's last touch; LRU
     victim = argmin(age), with invalid ways pinned to age -1 so they are
-    always chosen first. ``clock`` is the global stamp counter.
+    always chosen first. ``clock`` is the global stamp counter. ``dirty``
+    marks ways whose Data RAM line is newer than DRAM (write-back policy);
+    evicting a dirty way emits a victim write-back to the backing store.
     """
 
     tags: jnp.ndarray    # (sets, ways) int32
@@ -41,6 +44,7 @@ class CacheState:
     age: jnp.ndarray     # (sets, ways) int32
     data: jnp.ndarray    # (sets, ways, line_elems) — cached lines
     clock: jnp.ndarray   # () int32
+    dirty: jnp.ndarray   # (sets, ways) bool
 
 
 def init_cache(
@@ -53,6 +57,7 @@ def init_cache(
         age=jnp.full((sets, ways), -1, jnp.int32),
         data=jnp.zeros((sets, ways, line_elems), dtype),
         clock=jnp.zeros((), jnp.int32),
+        dirty=jnp.zeros((sets, ways), bool),
     )
 
 
@@ -63,11 +68,18 @@ def _split_addr(line_id: jnp.ndarray, num_sets: int):
 def lookup(
     state: CacheState, line_id: jnp.ndarray, fill_line: jnp.ndarray,
 ) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray]:
-    """One cache beat: probe ``line_id``; on miss install ``fill_line``.
+    """One *read-only* cache beat: probe ``line_id``; on miss install
+    ``fill_line``.
 
     Returns (new_state, hit?, line_data). ``fill_line`` is the line the MEM
     pipeline would return from DRAM; on a hit it is ignored — the Data RAM
     copy is served (so a stale fill cannot clobber a dirty line).
+
+    This beat has no write-back port: a miss that evicts a *dirty* way
+    would lose the dirty line. Only feed it states with no dirty lines
+    (pure read service) — mixed read/write traces go through
+    :func:`access_rw` / :func:`simulate_trace_rw`, or :func:`flush` the
+    state first.
     """
     num_sets = state.tags.shape[0]
     set_idx, tag = _split_addr(line_id, num_sets)
@@ -90,6 +102,10 @@ def lookup(
         age=state.age.at[set_idx, way].set(clock),
         data=state.data.at[set_idx, way].set(line_out),
         clock=clock,
+        # read beat: a hit keeps the way's dirty bit (served from Data RAM),
+        # a miss installs a fresh-from-DRAM line, which is clean.
+        dirty=state.dirty.at[set_idx, way].set(
+            hit & state.dirty[set_idx, way]),
     )
     return new_state, hit, line_out
 
@@ -97,11 +113,13 @@ def lookup(
 def simulate_trace(
     state: CacheState, line_ids: jnp.ndarray, table: jnp.ndarray,
 ) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray]:
-    """Service a request trace through the cache against backing ``table``.
+    """Service a *read* trace through the cache against backing ``table``.
 
     ``table[line_id]`` plays DRAM. Returns (final_state, hits (N,) bool,
     lines (N, line_elems)). Sequential scan = the shared-pipeline stall
     semantics of the paper (one beat at a time through shared Tag/Data RAM).
+    Like :func:`lookup`, this path has no write-back port — flush dirty
+    state first, or use :func:`simulate_trace_rw` for mixed traces.
     """
 
     def step(st, lid):
@@ -110,6 +128,129 @@ def simulate_trace(
 
     final, (hits, lines) = jax.lax.scan(step, state, line_ids)
     return final, hits, lines
+
+
+# ---------------------------------------------------------------------------
+# Write path (write-allocate; write-back or write-through per CacheConfig)
+# ---------------------------------------------------------------------------
+
+def _line_of(tag: jnp.ndarray, set_idx: jnp.ndarray, num_sets: int):
+    return tag * num_sets + set_idx
+
+
+def access_rw(
+    state: CacheState,
+    table: jnp.ndarray,
+    line_id: jnp.ndarray,
+    is_write: jnp.ndarray,
+    write_line: jnp.ndarray,
+    *,
+    write_back: bool = True,
+) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One cache beat of a mixed read/write stream against backing ``table``.
+
+    Write-allocate both ways; full-line writes (the controller's FLIT
+    payload is one line). Under write-back a write only touches Data RAM
+    and sets the dirty bit; DRAM sees the line when the way is evicted
+    (victim flush — the MEM pipeline's write port). Under write-through
+    every write also lands in ``table`` immediately and lines stay clean.
+
+    Returns (new_state, new_table, hit?, line_out) where ``line_out`` is
+    the value a read observes (reads see earlier writes — the same-address
+    ordering the weak-consistency rule guarantees).
+    """
+    num_sets = state.tags.shape[0]
+    n_rows = table.shape[0]
+    set_idx, tag = _split_addr(line_id, num_sets)
+
+    way_tags = state.tags[set_idx]
+    way_valid = state.valid[set_idx]
+    match = way_valid & (way_tags == tag)
+    hit = jnp.any(match)
+    hit_way = jnp.argmax(match)
+
+    victim = jnp.argmin(state.age[set_idx])
+    way = jnp.where(hit, hit_way, victim)
+
+    # Victim write-back: on a miss that evicts a valid dirty way, its line
+    # returns to DRAM before the fill (same set, different tag — the victim
+    # line can never equal ``line_id``).
+    victim_line = jnp.clip(
+        _line_of(state.tags[set_idx, way], set_idx, num_sets), 0, n_rows - 1)
+    evict = (~hit) & state.valid[set_idx, way] & state.dirty[set_idx, way]
+    table = table.at[victim_line].set(
+        jnp.where(evict, state.data[set_idx, way], table[victim_line]))
+
+    fill = table[line_id]
+    cached = jnp.where(hit, state.data[set_idx, way], fill)
+    line_out = jnp.where(is_write, write_line, cached)
+    new_dirty_bit = is_write if write_back else jnp.zeros((), bool)
+    keep_dirty = hit & state.dirty[set_idx, way] & ~is_write
+
+    if not write_back:
+        table = table.at[line_id].set(
+            jnp.where(is_write, write_line, table[line_id]))
+
+    clock = state.clock + 1
+    new_state = CacheState(
+        tags=state.tags.at[set_idx, way].set(tag),
+        valid=state.valid.at[set_idx, way].set(True),
+        age=state.age.at[set_idx, way].set(clock),
+        data=state.data.at[set_idx, way].set(line_out),
+        clock=clock,
+        dirty=state.dirty.at[set_idx, way].set(new_dirty_bit | keep_dirty),
+    )
+    return new_state, table, hit, line_out
+
+
+def simulate_trace_rw(
+    state: CacheState,
+    line_ids: jnp.ndarray,
+    rw: jnp.ndarray,
+    write_lines: jnp.ndarray,
+    table: jnp.ndarray,
+    *,
+    config: CacheConfig,
+) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Service a mixed read/write trace through the cache.
+
+    ``rw[i]`` is 0 (read) / 1 (write); ``write_lines[i]`` is the payload of
+    request i (ignored for reads). Returns (final_state, table', hits,
+    lines) — call :func:`flush` on the final state to push residual dirty
+    lines so ``table'`` matches the naive in-order write stream.
+    """
+    wb = config.write_policy == "write_back"
+
+    def step(carry, req):
+        st, tbl = carry
+        lid, is_w, wline = req
+        st, tbl, hit, line = access_rw(st, tbl, lid, is_w != 0, wline,
+                                       write_back=wb)
+        return (st, tbl), (hit, line)
+
+    (final, table), (hits, lines) = jax.lax.scan(
+        step, (state, table), (line_ids, rw, write_lines))
+    return final, table, hits, lines
+
+
+def flush(state: CacheState, table: jnp.ndarray
+          ) -> Tuple[CacheState, jnp.ndarray]:
+    """Write every valid dirty line back to ``table``; clear dirty bits.
+
+    Distinct (set, tag) pairs map to distinct lines, so the scatter has
+    no duplicate targets among flushed ways; everything else is masked
+    out of the write.
+    """
+    sets, ways = state.tags.shape
+    set_grid = jnp.arange(sets, dtype=state.tags.dtype)[:, None]
+    lines = _line_of(state.tags, jnp.broadcast_to(set_grid, (sets, ways)),
+                     sets)
+    mask = state.valid & state.dirty
+    new_table = scatter_util.masked_row_set(
+        table, jnp.clip(lines, 0, table.shape[0] - 1).reshape(-1),
+        state.data.reshape(sets * ways, -1), mask.reshape(-1))
+    return dataclasses.replace(
+        state, dirty=jnp.zeros_like(state.dirty)), new_table
 
 
 def hit_rate_oracle(

@@ -68,6 +68,11 @@ class CacheConfig:
     num_lines: int = 4096
     # Degree of set-associativity. [TUNE]
     associativity: int = 4
+    # Write policy for WRITE requests (write-allocate both ways):
+    # "write_back" keeps dirty lines in Data RAM until eviction (victim
+    # flush on the MEM pipeline), "write_through" mirrors every write to
+    # DRAM immediately. [TUNE]
+    write_policy: str = "write_back"
 
     def __post_init__(self) -> None:
         _check_range("cache.line_width_bits", self.line_width_bits, 256, 4096)
@@ -77,6 +82,10 @@ class CacheConfig:
         _check_pow2("cache.associativity", self.associativity)
         if self.associativity > self.num_lines:
             raise ValueError("associativity cannot exceed num_lines")
+        if self.write_policy not in ("write_back", "write_through"):
+            raise ValueError(
+                f"cache.write_policy={self.write_policy!r} must be "
+                "'write_back' or 'write_through'")
 
     @property
     def line_bytes(self) -> int:

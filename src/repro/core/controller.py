@@ -4,24 +4,32 @@
 it routes each request class to the right engine:
 
 * single/irregular row requests (embedding rows, KV pages, graph
-  adjacency) → **scheduler** (batch → stable sort by row → locality gather →
-  unsort) and optionally the **cache engine** (VMEM-resident hot rows);
-* bulk/streaming requests (weight tiles, activations) → **DMA engine**.
+  adjacency) → **scheduler** (batch → stable sort by row → locality
+  gather/scatter → unsort) and optionally the **cache engine**
+  (VMEM-resident hot rows, kept write-coherent);
+* bulk/streaming requests (weight tiles, activations) → **DMA engine**
+  (``bulk_read`` / ``bulk_write``).
+
+Both directions are covered: ``gather``/``cached_gather``/``bulk_read``
+on the read side, ``scatter``/``cached_scatter``/``bulk_write`` on the
+write side (single-type batches per the paper's weak consistency model).
 
 Every path has identical value semantics to the naive access (``table[idx]``
-/ ``copy``) so engines can be enabled per-application exactly like the
-paper's synthesis parameters — disabling an engine can never change results,
-only performance. That contract is property-tested.
+/ ``table.at[idx].set`` / ``copy``) so engines can be enabled
+per-application exactly like the paper's synthesis parameters — disabling
+an engine can never change results, only performance. That contract is
+property-tested.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dma_engine, scheduler
+from repro.core import dma_engine, scatter_util, scheduler
 from repro.core.config import MemoryControllerConfig
 from repro.core.timing import (DRAMTimings, DDR4_2400, SimResult,
                                simulate_dram_access)
@@ -46,6 +54,44 @@ def sorted_gather(
         gathered = jnp.take(table, jnp.take(idx_flat, perm, axis=0), axis=0)
         out = jnp.take(gathered, inv_perm, axis=0)
     return out.reshape(*indices.shape, table.shape[-1])
+
+
+def sorted_scatter(
+    table: jnp.ndarray, indices: jnp.ndarray, values: jnp.ndarray,
+    *, mode: str = "set", use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Scheduler-path scatter: reorder a WRITE batch by row before HBM.
+
+    Value-identical to the in-order write stream: for ``mode="set"`` the
+    stable sort keeps same-address arrival order so the last writer wins
+    (weak-consistency rule); for ``mode="add"`` each run accumulates in
+    promoted (≥f32) precision and rounds to the table dtype once.
+    Duplicate rows are coalesced — one HBM burst per distinct row. Thin
+    wrapper over the single sort-and-coalesce pipeline in
+    ``repro.kernels.sorted_scatter.ops``.
+    """
+    from repro.kernels.sorted_scatter import ops as ss_ops
+    return ss_ops.sorted_scatter(
+        table, indices, values, mode=mode,
+        backend="pallas" if use_pallas else "xla")
+
+
+def scatter_set_last(table: jnp.ndarray, idx: jnp.ndarray,
+                     vals: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic last-writer-wins scatter without sorting.
+
+    XLA's ``table.at[idx].set`` leaves duplicate-index ordering
+    implementation-defined, so the unscheduled path cannot rely on it and
+    still honor the engine-toggle value-identity contract. Instead the
+    winner of each row is found with a commutative reduction (max of
+    arrival stamp), and only winners write; losers target a sacrificial
+    padding row.
+    """
+    n = idx.shape[0]
+    stamp = jnp.arange(1, n + 1, dtype=jnp.int32)
+    winner = jnp.zeros((table.shape[0],), jnp.int32).at[idx].max(stamp)
+    is_winner = jnp.take(winner, idx) == stamp
+    return scatter_util.masked_row_set(table, idx, vals, is_winner)
 
 
 @dataclasses.dataclass
@@ -84,6 +130,13 @@ class HotRowCache:
                        self.hot_ids.shape[0] - 1)
         return self.hot_ids[pos] == idx
 
+    def repin(self, table: jnp.ndarray) -> "HotRowCache":
+        """Refresh the pinned rows from an updated table (the
+        write-allocate rule for the static hot set): after any write to
+        ``table``, re-pinning keeps subsequent cached gathers coherent."""
+        return HotRowCache(hot_ids=self.hot_ids,
+                           hot_data=jnp.take(table, self.hot_ids, axis=0))
+
 
 @dataclasses.dataclass
 class MemoryController:
@@ -107,12 +160,72 @@ class MemoryController:
             return cache.gather(table, indices)
         return self.gather(table, indices)
 
+    # --- irregular write path ------------------------------------------------
+    def scatter(self, table: jnp.ndarray, indices: jnp.ndarray,
+                values: jnp.ndarray, *, mode: str = "set") -> jnp.ndarray:
+        """Irregular row writes (embedding-gradient scatter, KV append).
+
+        Value-identical to the in-order write stream whether or not the
+        scheduler reorders the batch: ``mode="set"`` resolves duplicate
+        rows last-writer-wins; ``mode="add"`` accumulates in promoted
+        (≥f32) precision and rounds to the table dtype once — the same
+        reference on both paths, so low-precision (bf16) tables don't
+        swallow small addends on one path and not the other.
+        """
+        if mode not in ("set", "add"):
+            raise ValueError(f"mode must be 'set' or 'add', got {mode!r}")
+        if self.config.scheduler.enabled:
+            return sorted_scatter(table, indices, values, mode=mode,
+                                  use_pallas=self.use_pallas)
+        idx = indices.reshape(-1)
+        vals = values.reshape(idx.shape[0], table.shape[-1])
+        if mode == "add":
+            acc = jnp.promote_types(jnp.float32, table.dtype)
+            return table.astype(acc).at[idx].add(
+                vals.astype(acc)).astype(table.dtype)
+        return scatter_set_last(table, idx, vals)
+
+    def cached_scatter(
+        self, table: jnp.ndarray, indices: jnp.ndarray,
+        values: jnp.ndarray, cache: HotRowCache, *, mode: str = "set",
+    ) -> tuple[jnp.ndarray, HotRowCache]:
+        """Scatter that keeps a ``HotRowCache`` coherent: the pinned set
+        is re-pinned from the updated table (one gather over the hot
+        ids). Returns (new_table, new_cache); with the cache engine
+        disabled the cache object passes through untouched (and reads
+        bypass it, so results are unchanged). The table write itself
+        goes through :meth:`scatter`, so the scheduler toggle applies
+        independently of the cache toggle."""
+        new_table = self.scatter(table, indices, values, mode=mode)
+        if self.config.cache.enabled:
+            return new_table, cache.repin(new_table)
+        return new_table, cache
+
     # --- bulk path ----------------------------------------------------------
     def bulk_read(self, src: jnp.ndarray) -> jnp.ndarray:
         if self.config.dma.enabled:
             return dma_engine.bulk_copy(src, config=self.config.dma,
                                         use_pallas=self.use_pallas)
         return src + 0  # plain copy through the default path
+
+    def bulk_write(self, dst: jnp.ndarray, src: jnp.ndarray,
+                   *, offset_elems: int = 0) -> jnp.ndarray:
+        """Bulk/streaming write of ``src`` into ``dst`` (weight tiles,
+        activation spills, KV page flushes). Value-identical to writing
+        the flat region ``[offset, offset+src.size)`` of ``dst``."""
+        # Bounds-check on both paths: the default path's
+        # dynamic_update_slice would silently clamp, which would make the
+        # result depend on the engine toggle.
+        if offset_elems < 0 or offset_elems + src.size > dst.size:
+            raise ValueError("bulk_write region out of destination bounds")
+        if self.config.dma.enabled:
+            return dma_engine.bulk_write(dst, src, config=self.config.dma,
+                                         offset_elems=offset_elems,
+                                         use_pallas=self.use_pallas)
+        flat = dst.reshape(-1)
+        out = jax.lax.dynamic_update_slice(
+            flat, src.reshape(-1).astype(dst.dtype), (offset_elems,))
+        return out.reshape(dst.shape)
 
     # --- modeled performance (benchmark substrate) ---------------------------
     def modeled_gather_time(
@@ -125,3 +238,20 @@ class MemoryController:
             addrs, np.zeros(addrs.shape[0], np.int32),
             config=self.config.scheduler, timings=self.timings)
         return simulate_dram_access(served, self.timings)
+
+    def modeled_access_time(
+        self, row_ids: np.ndarray, rw: np.ndarray, row_bytes: int,
+        *, coalesce_writes: bool = False,
+    ) -> SimResult:
+        """Modeled DRAM time for a mixed read/write row trace: the
+        scheduler forms single-type batches and row-sorts each, then the
+        stream is costed with open-row state *and* bus-turnaround
+        penalties (the Fig. 7 methodology extended to writes).
+        ``coalesce_writes`` also models per-batch VMEM write coalescing
+        (what the sorted_scatter data plane does; fig7w uses it)."""
+        addrs = np.asarray(row_ids, dtype=np.int64) * row_bytes
+        served, served_rw = scheduler.schedule_trace_rw(
+            addrs, np.asarray(rw, dtype=np.int32),
+            config=self.config.scheduler, timings=self.timings,
+            coalesce_writes=coalesce_writes)
+        return simulate_dram_access(served, self.timings, rw=served_rw)

@@ -111,6 +111,54 @@ def bulk_copy(
     return chunks.reshape(-1)[:n].reshape(src.shape)
 
 
+def bulk_write(
+    dst: jnp.ndarray,
+    src: jnp.ndarray,
+    *,
+    config: DMAConfig,
+    offset_elems: int = 0,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Bulk-write ``src`` into ``dst`` (flat offset) through the DMA path.
+
+    Write-side twin of :func:`bulk_copy`: the transfer is staged in
+    ``max_transaction``-sized chunks per channel buffer, then streamed to
+    the destination as wide sequential bursts that bypass the cache (no
+    pollution, paper §IV-B). Value-identical to
+    ``dst.flat[offset:offset+src.size] = src`` — returning the updated
+    array — so the engine can be toggled without changing results.
+    """
+    if use_pallas:
+        from repro.kernels.dma_copy import ops as dma_ops
+        src = dma_ops.dma_copy(src, config=config)   # staged read side
+
+    dst_flat = dst.reshape(-1)
+    src_flat = src.reshape(-1).astype(dst.dtype)
+    elem_bytes = dst_flat.dtype.itemsize
+    txn_elems = max(1, config.max_transaction_bytes // elem_bytes)
+    n = src_flat.shape[0]
+    if offset_elems < 0 or offset_elems + n > dst_flat.shape[0]:
+        raise ValueError("bulk_write region out of destination bounds")
+
+    full = n // txn_elems
+
+    def write_txn(buf, i):
+        start = i * txn_elems
+        chunk = jax.lax.dynamic_slice(src_flat, (start,), (txn_elems,))
+        return jax.lax.dynamic_update_slice(
+            buf, chunk, (offset_elems + start,)), None
+
+    out = dst_flat
+    if full:
+        out, _ = jax.lax.scan(write_txn, out, jnp.arange(full))
+    tail = n - full * txn_elems
+    if tail:                                   # ragged last transaction
+        out = jax.lax.dynamic_update_slice(
+            out, src_flat[full * txn_elems:],
+            (offset_elems + full * txn_elems,))
+    return out.reshape(dst.shape)
+
+
 def channel_vmem_bytes(config: DMAConfig) -> int:
     """VMEM claimed by the engine (double-buffered staging per channel) —
     the TPU analogue of Fig. 5's URAM series."""

@@ -1,0 +1,25 @@
+"""Masked row-scatter via a sacrificial padding row.
+
+XLA scatter with duplicate or masked-out targets needs care: this helper
+routes masked-out slots to a padding row appended to the table, scatters,
+and slices the pad off — deterministic as long as the *kept* rows are
+unique, which every caller guarantees (last-of-run / winner-stamp dedup,
+or distinct (set, tag) pairs). One copy of the idiom, shared by the
+controller scatter paths and the cache engine's flush.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_row_set(table: jnp.ndarray, rows: jnp.ndarray,
+                   vals: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Write ``vals[i]`` to ``table[rows[i]]`` where ``keep[i]``; slots
+    with ``keep[i] == False`` land on the padding row and are discarded.
+    ``rows`` entries where ``keep`` holds must be unique and in range."""
+    n_rows = table.shape[0]
+    safe = jnp.where(keep, rows, n_rows)
+    padded = jnp.concatenate(
+        [table, jnp.zeros((1, table.shape[-1]), table.dtype)], axis=0)
+    return padded.at[safe].set(vals.astype(table.dtype))[:n_rows]

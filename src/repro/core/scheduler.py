@@ -53,6 +53,32 @@ class RequestBatch:
         return int(self.addr.shape[0])
 
 
+def _normalize_trace(addrs, rw, arrival_cycle, pe_id, sizes):
+    """Shared input conditioning for both batch formers.
+
+    ``arrival_cycle=None`` means the saturated-traffic regime — many PEs
+    issue in parallel, the input queue never starves, so the timeout
+    never fires (the Fig. 9 benchmarking condition). Pass explicit
+    arrival cycles to model low-traffic behaviour.
+    """
+    addrs = np.asarray(addrs, dtype=np.int64)
+    rw_arr = np.asarray(rw, dtype=np.int32)
+    n = addrs.shape[0]
+    if arrival_cycle is None:
+        arrival_cycle = np.zeros(n, dtype=np.int64)
+    else:
+        arrival_cycle = np.asarray(arrival_cycle, dtype=np.int64)
+    if pe_id is None:
+        pe_id = np.zeros(n, dtype=np.int32)
+    else:
+        pe_id = np.asarray(pe_id, dtype=np.int32)
+    if sizes is None:
+        sizes = np.full(n, 1, dtype=np.int32)
+    else:
+        sizes = np.asarray(sizes, dtype=np.int32)
+    return addrs, rw_arr, arrival_cycle, pe_id, sizes
+
+
 def form_batches(
     addrs: Sequence[int],
     rw: Sequence[int],
@@ -69,25 +95,9 @@ def form_batches(
     ``config.timeout_cycles`` (deadlock avoidance under low traffic), or
     (c) the request type flips read<->write (single-type batches).
     """
-    addrs = np.asarray(addrs, dtype=np.int64)
-    rw_arr = np.asarray(rw, dtype=np.int32)
+    addrs, rw_arr, arrival_cycle, pe_id, sizes = _normalize_trace(
+        addrs, rw, arrival_cycle, pe_id, sizes)
     n = addrs.shape[0]
-    if arrival_cycle is None:
-        # Default regime: saturated traffic — many PEs issue in parallel, the
-        # input queue never starves, so the timeout never fires (this is the
-        # Fig. 9 benchmarking condition). Pass explicit arrival cycles to
-        # model low-traffic behaviour.
-        arrival_cycle = np.zeros(n, dtype=np.int64)
-    else:
-        arrival_cycle = np.asarray(arrival_cycle, dtype=np.int64)
-    if pe_id is None:
-        pe_id = np.zeros(n, dtype=np.int32)
-    else:
-        pe_id = np.asarray(pe_id, dtype=np.int32)
-    if sizes is None:
-        sizes = np.full(n, 1, dtype=np.int32)
-    else:
-        sizes = np.asarray(sizes, dtype=np.int32)
 
     start = 0
     for i in range(1, n + 1):
@@ -111,6 +121,61 @@ def form_batches(
             start = i
             if start == n:
                 break
+
+
+def form_batches_typed(
+    addrs: Sequence[int],
+    rw: Sequence[int],
+    arrival_cycle: Sequence[int] | None = None,
+    pe_id: Sequence[int] | None = None,
+    sizes: Sequence[int] | None = None,
+    *,
+    config: SchedulerConfig,
+) -> Iterator[RequestBatch]:
+    """Dual-queue batch formation: one pending batch per request type.
+
+    The FPGA's double-buffered input queues let reads and writes
+    accumulate *concurrently*; a read↔write flip in the arrival stream
+    parks the request in the other queue instead of closing the current
+    batch. On mixed streams this yields full-size single-type batches —
+    the property that amortizes both the sort (Eq. 1) and the bus
+    turnaround (tWTR/tRTW) — where the single-queue ``form_batches``
+    degenerates to tiny batches.
+
+    Consistency: same-address same-type order is preserved (stable queues);
+    a read is *not* ordered against a concurrent write to the same address
+    — exactly the paper's weak consistency model. Request streams that
+    need read-after-write ordering must fence (close batches) between the
+    write and the read.
+    """
+    addrs, rw_arr, arrival_cycle, pe_id, sizes = _normalize_trace(
+        addrs, rw, arrival_cycle, pe_id, sizes)
+    n = addrs.shape[0]
+
+    queues: dict[int, list[int]] = {READ: [], WRITE: []}
+
+    def emit(t: int) -> RequestBatch:
+        q = queues[t]
+        batch = RequestBatch(
+            pe_id=pe_id[q], rw=t, addr=addrs[q], size=sizes[q],
+            seq=np.asarray(q, dtype=np.int64))
+        queues[t] = []
+        return batch
+
+    for i in range(n):
+        t = int(rw_arr[i])
+        for qt in (READ, WRITE):
+            q = queues[qt]
+            if q and (arrival_cycle[i] - arrival_cycle[q[0]]
+                      ) > config.timeout_cycles:
+                yield emit(qt)
+        queues[t].append(i)
+        if len(queues[t]) >= config.batch_size:
+            yield emit(t)
+    # Flush partials, oldest queue first (FIFO drain at end of trace).
+    rest = [t for t in (READ, WRITE) if queues[t]]
+    for t in sorted(rest, key=lambda t: queues[t][0]):
+        yield emit(t)
 
 
 def reorder_batch(
@@ -142,15 +207,53 @@ def schedule_trace(
 ) -> np.ndarray:
     """Run the full control plane over a trace; return the reordered
     address stream as seen by the DRAM (used by the Fig. 7/9 benchmarks)."""
+    return schedule_trace_rw(addrs, rw, config=config, timings=timings,
+                             arrival_cycle=arrival_cycle)[0]
+
+
+def schedule_trace_rw(
+    addrs: Sequence[int],
+    rw: Sequence[int],
+    *,
+    config: SchedulerConfig,
+    timings: DRAMTimings = DDR4_2400,
+    arrival_cycle: Sequence[int] | None = None,
+    coalesce_writes: bool = False,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Like :func:`schedule_trace` but also returns the serviced rw stream.
+
+    Uses the dual-queue (typed) batch former, so an interleaved
+    read/write stream still yields full-size single-type batches; the
+    scheduled stream then changes bus direction at most once per batch
+    boundary — feed the pair into
+    ``timing.simulate_dram_access(addrs, rw=rw)`` to charge the tWTR/tRTW
+    turnarounds the batching amortizes (mixed read/write workloads,
+    Fig. 7-write methodology).
+
+    ``coalesce_writes`` additionally models the sorted_scatter kernel's
+    VMEM coalescing: within each WRITE batch, adjacent duplicate rows
+    collapse to one HBM burst (last-writer-wins / accumulated add).
+    Coalescing never crosses a batch boundary — each batch is a separate
+    kernel invocation with its own flush.
+    """
     if not config.enabled:
-        return np.asarray(addrs, dtype=np.int64)
-    out = []
-    for batch in form_batches(addrs, rw, arrival_cycle, config=config):
+        return (np.asarray(addrs, dtype=np.int64),
+                np.asarray(rw, dtype=np.int32))
+    out, out_rw = [], []
+    for batch in form_batches_typed(addrs, rw, arrival_cycle, config=config):
         if config.bypass_sequential and _is_sequential(batch.addr, timings):
-            out.append(batch.addr)          # bypass path (paper §V-C)
+            srv = batch.addr                # bypass path (paper §V-C)
         else:
-            out.append(reorder_batch(batch, timings).addr)
-    return np.concatenate(out) if out else np.empty(0, dtype=np.int64)
+            srv = reorder_batch(batch, timings).addr
+        if coalesce_writes and batch.rw == WRITE and srv.shape[0] > 1:
+            keep = np.ones(srv.shape[0], dtype=bool)
+            keep[1:] = srv[1:] != srv[:-1]
+            srv = srv[keep]
+        out.append(srv)
+        out_rw.append(np.full(srv.shape[0], batch.rw, dtype=np.int32))
+    if not out:
+        return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int32)
+    return np.concatenate(out), np.concatenate(out_rw)
 
 
 def _is_sequential(addr: np.ndarray, timings: DRAMTimings) -> bool:

@@ -40,6 +40,12 @@ class DRAMTimings:
     row_bytes: int = 8192           # row buffer (page) size
     burst_bytes: int = 64           # one BL8 x 64b burst
     t_burst: int = 4                # cycles to stream one burst after CAS
+    # Bus-turnaround penalties (DDR4 tWTR/tRTW class): cycles lost when the
+    # data bus flips direction between a write and a read burst. Charged
+    # per direction change in the serviced stream — the reason the
+    # scheduler issues single-type (read xor write) batches.
+    t_wtr: int = 8                  # write -> read turnaround
+    t_rtw: int = 4                  # read -> write turnaround
 
     # --- paper's derived averages (§IV, 'DRAM Timing Model') -------------
     @property
@@ -162,6 +168,7 @@ def simulate_dram_access(
     addrs: np.ndarray,
     timings: DRAMTimings = DDR4_2400,
     burst_bytes: int | None = None,
+    rw: np.ndarray | None = None,
 ) -> SimResult:
     """Simulate an address trace against per-bank open-row state.
 
@@ -169,6 +176,10 @@ def simulate_dram_access(
     ``t_rcd + t_cl``; subsequent accesses to the *same open row* cost
     ``t_cl`` (plus burst streaming); a different row costs
     ``t_rp + t_rcd + t_cl``. Returns totals in FPGA cycles.
+
+    When ``rw`` (0=read / 1=write per request) is given, every data-bus
+    direction change additionally pays the ``t_wtr`` / ``t_rtw``
+    turnaround — the cost the scheduler's single-type batches amortize.
 
     Vectorized: classify each access by comparing with the previous access
     to the same bank (np-based; traces run to millions of requests).
@@ -207,12 +218,26 @@ def simulate_dram_access(
         + n_conflict * (timings.t_rp + timings.t_rcd + timings.t_cl)
         + addrs.size * timings.t_burst
     )
+    if rw is not None:
+        dram_cycles += turnaround_cycles(rw, timings)
     return SimResult(
         total_fpga_cycles=dram_cycles * timings.clock_ratio,
         row_hits=n_hit,
         row_conflicts=n_conflict,
         first_accesses=n_first,
     )
+
+
+def turnaround_cycles(rw: np.ndarray, timings: DRAMTimings = DDR4_2400) -> int:
+    """DRAM cycles lost to bus direction changes in a serviced rw stream:
+    each WRITE→READ edge costs ``t_wtr``, each READ→WRITE edge ``t_rtw``."""
+    rw = np.asarray(rw, dtype=np.int32).ravel()
+    if rw.size < 2:
+        return 0
+    prev, cur = rw[:-1], rw[1:]
+    wtr = int(((prev == 1) & (cur == 0)).sum())
+    rtw = int(((prev == 0) & (cur == 1)).sum())
+    return wtr * timings.t_wtr + rtw * timings.t_rtw
 
 
 def simulate_dram_access_windowed(

@@ -4,6 +4,10 @@
 cache pipeline, serve hits from the Data RAM, fill misses from ``table``
 (the HBM side), and return data in arrival order + updated state — value
 semantics identical to ``table[line_ids]``, property-tested.
+
+Read-only service: like ``cache_engine.lookup`` it has no write-back
+port, so states carrying dirty lines must be flushed before entering
+(mixed read/write traces belong to ``cache_engine.simulate_trace_rw``).
 """
 
 from __future__ import annotations
@@ -38,6 +42,11 @@ def cache_service(table: jnp.ndarray, line_ids: jnp.ndarray,
     lines = from_mem  # value-identical serve (hits avoid HBM on real HW)
     new_data = state.data.at[set_idx, ways].set(from_mem)
 
+    # Read-only service: fills install clean lines; a hit keeps the way's
+    # dirty bit (its Data RAM content is untouched).
+    new_dirty = state.dirty.at[set_idx, ways].set(
+        state.dirty[set_idx, ways] & (hits != 0))
     new_state = CacheState(tags=tags, valid=valid != 0, age=age,
-                           data=new_data, clock=clock.reshape(()))
+                           data=new_data, clock=clock.reshape(()),
+                           dirty=new_dirty)
     return lines, hits != 0, new_state

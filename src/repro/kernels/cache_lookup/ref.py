@@ -21,7 +21,8 @@ def cache_probe_ref(line_ids, tags, valid, age, clock):
     """
     state = CacheState(tags=tags, valid=valid != 0, age=age,
                        data=jnp.zeros((*tags.shape, 1), jnp.float32),
-                       clock=clock.reshape(()))
+                       clock=clock.reshape(()),
+                       dirty=jnp.zeros(tags.shape, bool))
     hits, ways = [], []
     for lid in line_ids:
         state, hit, _ = lookup(state, lid, jnp.zeros((1,), jnp.float32))

@@ -1,0 +1,32 @@
+"""Run-coalescing for sorted write batches (shared by the Pallas op and
+the controller's XLA fallback — one copy of the subtle reduction math).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def coalesce_add_runs(table: jnp.ndarray, sidx: jnp.ndarray,
+                      svals: jnp.ndarray) -> jnp.ndarray:
+    """Fold each equal-index run of a *sorted* write batch for ``add``.
+
+    Returns per-slot values ``table[row] + Σ(run values)``, so flushing
+    any one slot of a run — in particular the final one the VMEM
+    coalescing keeps — accumulates exactly like the in-order stream.
+    Sums are taken *per run* (segment sum keyed on the run-start index)
+    in at least float32 — float64 tables accumulate in float64, so the
+    naive-``add`` identity holds at the table's own precision — with no
+    global prefix accumulation, so a short run's sum stays accurate even
+    in million-row batches.
+    """
+    acc_dtype = jnp.promote_types(jnp.float32, table.dtype)
+    starts = jnp.searchsorted(sidx, sidx, side="left")
+    totals = jax.ops.segment_sum(svals.astype(acc_dtype), starts,
+                                 num_segments=sidx.shape[0])
+    run_sum = jnp.take(totals, starts, axis=0)
+    # The base-row add also happens in the accumulator dtype — rounding
+    # to the table dtype exactly once, same as the unscheduled reference.
+    return (jnp.take(table, sidx, axis=0).astype(acc_dtype)
+            + run_sum).astype(table.dtype)

@@ -1,0 +1,64 @@
+"""Sorted-scatter — the scheduler's write-side locality payoff, in Pallas.
+
+Mirror image of ``sorted_gather``: the FPGA scheduler reorders a WRITE
+batch so same-row writes reach DRAM back-to-back. The TPU analogue: feed
+*sorted* row indices to a scalar-prefetch scatter whose *output* BlockSpec
+index map selects ``table[idx[i]]``. When consecutive grid steps map to the
+same output block the Pallas pipeline emitter defers the VMEM→HBM copy-out
+until the block changes — duplicate-row writes are **coalesced in VMEM**
+and only the final value of a run is flushed, one HBM burst per distinct
+row. That is simultaneously the row-buffer-hit economics of the paper and
+its weak-consistency rule: within a sorted run the last writer (in arrival
+order, preserved by the stable sort) wins.
+
+The table is passed through ``input_output_aliases`` so rows never written
+keep their original contents — the kernel is an in-place row update, not a
+rebuild of the table.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_row_kernel(idx_ref, val_ref, table_ref, out_ref):
+    # idx_ref (scalar prefetch) already steered the output pipeline to row
+    # idx[i]; table_ref is only present for the HBM aliasing — the body is a
+    # VMEM overwrite, so a run of equal indices coalesces before copy-out.
+    del idx_ref, table_ref
+    out_ref[...] = val_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scatter_rows(table: jnp.ndarray, sorted_idx: jnp.ndarray,
+                 values: jnp.ndarray, *, interpret: bool = True):
+    """Write ``values[i]`` to ``table[sorted_idx[i]]``, last writer wins.
+
+    Callers must pass indices sorted (stably) by row to get the VMEM
+    coalescing and HBM locality; *correctness* additionally requires equal
+    indices to be adjacent, which sorting guarantees — with non-adjacent
+    duplicates an earlier flushed block could clobber a later one.
+    """
+    n = sorted_idx.shape[0]
+    d = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),           # values
+            pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),  # table
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        _scatter_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        input_output_aliases={2: 0},   # table buffer is updated in place
+        interpret=interpret,
+    )(sorted_idx.astype(jnp.int32), values, table)

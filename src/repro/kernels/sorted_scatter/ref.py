@@ -1,0 +1,25 @@
+"""Oracles for sorted_scatter: sequential write-stream semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def scatter_ref(table: jnp.ndarray, indices: jnp.ndarray,
+                values: jnp.ndarray, mode: str = "set") -> jnp.ndarray:
+    """In-order write stream (the naive un-scheduled controller): writes
+    land one at a time, so duplicates resolve to the last arrival for
+    ``set`` and accumulate for ``add`` — in promoted (≥f32) precision
+    with a single final round, the same reference the controller's
+    toggle-identity contract is defined against."""
+    if mode == "add":
+        idx = indices.reshape(-1)
+        vals = values.reshape(idx.shape[0], table.shape[-1])
+        acc = jnp.promote_types(jnp.float32, table.dtype)
+        return table.astype(acc).at[idx].add(
+            vals.astype(acc)).astype(table.dtype)
+    out = np.array(table)
+    idx = np.asarray(indices).reshape(-1)
+    vals = np.asarray(values).reshape(idx.shape[0], -1)
+    for i, row in enumerate(idx):
+        out[row] = vals[i]
+    return jnp.asarray(out, table.dtype)

@@ -136,7 +136,8 @@ def attn_decode(p, x, cache, cur_len: jnp.ndarray,
     slot = cur_len % C if w is not None else cur_len
 
     def dus(buf, new, axis=1):
-        return jax.lax.dynamic_update_slice_in_dim(buf, new, slot, axis)
+        # KV append = the controller's bulk-write request class (fig7w).
+        return layers.mc_kv_append(buf, new, slot, cfg.mc, axis=axis)
 
     if quant:
         kq, ks = quantize_kv(k)

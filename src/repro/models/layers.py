@@ -13,9 +13,11 @@ Attention comes in two forms:
   the mesh (flash-decoding style distributed softmax — XLA inserts the
   small all-reduces for max/sum).
 
-Embedding lookups route through the memory controller (`mc_embed`):
-token ids are stable-sorted per sequence before the table gather — the
-paper's scheduler applied to the vocabulary table.
+Embedding traffic routes through the memory controller in both
+directions: lookups via ``mc_embed`` (token ids stable-sorted per sequence
+before the table gather) and table updates via ``mc_scatter`` (the
+embedding-gradient WRITE stream, batch-sorted and coalesced per row);
+``mc_kv_append`` is the decode-step KV page write on the DMA bulk path.
 """
 
 from __future__ import annotations
@@ -180,3 +182,35 @@ def mc_embed(table: jnp.ndarray, tokens: jnp.ndarray,
     gathered = jnp.take(table, sorted_tok, axis=0)
     inv = jnp.argsort(perm, axis=-1, stable=True)
     return jnp.take_along_axis(gathered, inv[..., None], axis=-2)
+
+
+def mc_scatter(table: jnp.ndarray, tokens: jnp.ndarray,
+               values: jnp.ndarray, mc: MemoryControllerConfig,
+               *, mode: str = "add") -> jnp.ndarray:
+    """Embedding write through the memory controller's scheduler.
+
+    The write-side twin of :func:`mc_embed`: the backward of an embedding
+    lookup is an irregular scatter of per-token rows into the table
+    (gradient accumulation, ``mode="add"``), the same WRITE stream the
+    controller batch-sorts by row. Value-identical to
+    ``table.at[tokens].add(values)`` / last-writer-wins ``set``.
+    """
+    from repro.core.controller import MemoryController
+    return MemoryController(mc).scatter(table, tokens, values, mode=mode)
+
+
+def mc_kv_append(buf: jnp.ndarray, new: jnp.ndarray, slot,
+                 mc: MemoryControllerConfig, axis: int = 1) -> jnp.ndarray:
+    """One decode-step KV append — the controller's bulk-write request
+    class.
+
+    A cache row is a contiguous page, so the append is classified as a
+    bulk/streaming write (cache-bypassing), not an irregular scatter;
+    its DRAM cost is what ``benchmarks/fig7_write_workloads.py`` models.
+    The data-plane transport here is the default dynamic-update for every
+    engine setting — ``mc`` marks the request class at the call site (and
+    reserves the seam for a modeled-transport hook) without affecting
+    values.
+    """
+    del mc  # request classification only; never affects stored values
+    return jax.lax.dynamic_update_slice_in_dim(buf, new, slot, axis)

@@ -75,6 +75,24 @@ class LM:
         x = shard(x, self.rules, "batch", "seq", "embed", mesh=self.mesh)
         return x, mask
 
+    def embedding_grad_update(self, params, tokens: jnp.ndarray,
+                              grad_rows: jnp.ndarray, lr: float = 1.0):
+        """Apply a sparse embedding update through the controller write path.
+
+        ``grad_rows`` holds one gradient row per token occurrence (the
+        backward of ``mc_embed``); rows for repeated tokens accumulate —
+        the controller's scheduler stable-sorts the WRITE batch by row and
+        coalesces duplicates before touching HBM (``mc_scatter``,
+        mode="add"). Value-identical to
+        ``table.at[tokens].add(-lr * grad_rows)``. Returns params with the
+        updated table; every other leaf is shared, not copied.
+        """
+        table = params["embed"]["table"]
+        new_table = layers.mc_scatter(
+            table, tokens, (-lr * grad_rows).astype(table.dtype),
+            self.cfg.mc, mode="add")
+        return {**params, "embed": {**params["embed"], "table": new_table}}
+
     def _full_labels(self, batch, S: int) -> jnp.ndarray:
         labels = batch["labels"]
         pad = S - labels.shape[1]

@@ -2,6 +2,12 @@
 benches must see the real single CPU device; multi-device distribution
 tests spawn subprocesses with their own flags."""
 
+try:
+    import hypothesis  # noqa: F401  — real engine when available (CI)
+except ImportError:    # hermetic environments: deterministic fallback
+    from _hypothesis_fallback import install as _install_hypothesis
+    _install_hypothesis()
+
 import jax
 import numpy as np
 import pytest

@@ -5,8 +5,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cache_engine import (hit_rate_oracle, init_cache,
-                                     simulate_trace)
+from repro.core.cache_engine import (flush, hit_rate_oracle, init_cache,
+                                     simulate_trace, simulate_trace_rw)
 from repro.core.config import CacheConfig
 
 
@@ -46,6 +46,103 @@ def test_higher_associativity_never_hurts_this_workload(rng):
         _, rate = hit_rate_oracle(cfg, lids)
         rates.append(rate)
     assert rates == sorted(rates) or max(rates) - min(rates) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# Write policy (write-allocate; write-back / write-through)
+# ---------------------------------------------------------------------------
+
+def _run_rw(cfg, lids, rw, wlines, table):
+    st0 = init_cache(cfg, table.shape[1])
+    st1, tbl, hits, lines = simulate_trace_rw(
+        st0, jnp.asarray(lids, jnp.int32), jnp.asarray(rw, jnp.int32),
+        wlines, table, config=cfg)
+    return st1, tbl, hits, lines
+
+
+def test_write_back_round_trip():
+    """write → force eviction → re-read returns the written data (victim
+    flush pushed the dirty line to DRAM before the way was reused)."""
+    cfg = CacheConfig(num_lines=256, associativity=1,
+                      write_policy="write_back")
+    sets = cfg.num_sets
+    table = jnp.zeros((4 * sets, 4), jnp.float32)
+    target = 5
+    written = jnp.full((4,), 7.5, jnp.float32)
+    # write line 5, then read 5+sets and 5+2*sets (both map to set 5,
+    # ways=1 ⇒ each evicts the previous occupant), then re-read 5
+    lids = [target, target + sets, target + 2 * sets, target]
+    rw = [1, 0, 0, 0]
+    wlines = jnp.stack([written, jnp.zeros(4), jnp.zeros(4), jnp.zeros(4)])
+    st1, tbl, hits, lines = _run_rw(cfg, lids, rw, wlines, table)
+    np.testing.assert_array_equal(np.asarray(lines)[3], np.asarray(written))
+    np.testing.assert_array_equal(np.asarray(tbl)[target],
+                                  np.asarray(written))
+
+
+def test_write_back_dirty_stays_cached_until_eviction():
+    """Under write-back a write must NOT reach DRAM while the line is
+    resident; flush() pushes the residue."""
+    cfg = CacheConfig(num_lines=256, associativity=4,
+                      write_policy="write_back")
+    table = jnp.zeros((1024, 4), jnp.float32)
+    written = jnp.full((1, 4), 3.25, jnp.float32)
+    st1, tbl, _, _ = _run_rw(cfg, [9], [1], written, table)
+    assert not np.asarray(tbl[9]).any()          # DRAM still stale
+    st2, tbl2 = flush(st1, tbl)
+    np.testing.assert_array_equal(np.asarray(tbl2)[9], np.asarray(written)[0])
+    assert not np.asarray(st2.dirty).any()
+
+
+def test_write_through_updates_dram_immediately():
+    cfg = CacheConfig(num_lines=256, associativity=4,
+                      write_policy="write_through")
+    table = jnp.zeros((1024, 4), jnp.float32)
+    written = jnp.full((1, 4), 2.5, jnp.float32)
+    st1, tbl, _, _ = _run_rw(cfg, [9], [1], written, table)
+    np.testing.assert_array_equal(np.asarray(tbl)[9], np.asarray(written)[0])
+    assert not np.asarray(st1.dirty).any()
+
+
+def test_read_after_write_hit_serves_written_line(rng):
+    cfg = CacheConfig(num_lines=256, associativity=4)
+    table = jnp.asarray(rng.standard_normal((1024, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((1, 4)), jnp.float32)
+    wlines = jnp.concatenate([w, jnp.zeros((1, 4))])
+    _, _, hits, lines = _run_rw(cfg, [33, 33], [1, 0], wlines, table)
+    assert bool(np.asarray(hits)[1])
+    np.testing.assert_array_equal(np.asarray(lines)[1], np.asarray(w)[0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 600), st.integers(0, 1)),
+                min_size=1, max_size=60),
+       st.sampled_from(["write_back", "write_through"]),
+       st.sampled_from([1, 4]))
+def test_property_rw_trace_matches_sequential_oracle(reqs, policy, ways):
+    """Flushed table == naive in-order write stream; reads see the latest
+    same-address write (read-your-writes through the cache)."""
+    cfg = CacheConfig(num_lines=256, associativity=ways,
+                      write_policy=policy)
+    n = len(reqs)
+    lids = np.array([r[0] for r in reqs])
+    rw = np.array([r[1] for r in reqs])
+    wlines = (np.arange(n, dtype=np.float32)[:, None] + 1.0
+              ) * np.ones((1, 2), np.float32)
+    table = jnp.zeros((1024, 2), jnp.float32)
+    st1, tbl, _, lines = _run_rw(cfg, lids, rw, jnp.asarray(wlines), table)
+    _, tbl = flush(st1, tbl)
+    ref = np.zeros((1024, 2), np.float32)
+    ref_lines = []
+    for i in range(n):
+        if rw[i]:
+            ref[lids[i]] = wlines[i]
+            ref_lines.append(wlines[i])
+        else:
+            ref_lines.append(ref[lids[i]].copy())
+    np.testing.assert_allclose(np.asarray(tbl), ref, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(lines), np.stack(ref_lines),
+                               rtol=1e-6)
 
 
 @settings(max_examples=20, deadline=None)

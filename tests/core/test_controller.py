@@ -9,7 +9,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (HotRowCache, MemoryController, PAPER_EVAL_CONFIG,
-                        sorted_gather)
+                        sorted_gather, sorted_scatter)
+from repro.kernels.sorted_scatter.ref import scatter_ref
 from repro.core.autotune import tune
 from repro.core.config import (CacheConfig, DMAConfig,
                                MemoryControllerConfig, SchedulerConfig)
@@ -58,6 +59,105 @@ def test_property_sorted_gather_identity(ids):
     idx = jnp.asarray(ids, jnp.int32)
     np.testing.assert_array_equal(
         np.asarray(sorted_gather(table, idx)), np.asarray(table[idx]))
+
+
+@pytest.mark.parametrize("sched", [True, False])
+@pytest.mark.parametrize("cache", [True, False])
+@pytest.mark.parametrize("dma", [True, False])
+@pytest.mark.parametrize("mode", ["set", "add"])
+def test_scatter_identity_across_engine_configs(sched, cache, dma, mode,
+                                                rng):
+    if not (sched or cache or dma):
+        pytest.skip("MemoryControllerConfig requires at least one engine")
+    mc = MemoryController(_cfg(sched=sched, cache=cache, dma=dma))
+    table = jnp.asarray(rng.standard_normal((128, 16)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 128, (4, 9)), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal((4, 9, 16)), jnp.float32)
+    out = mc.scatter(table, idx, vals, mode=mode)
+    # scatter_ref is the sequential in-order oracle — deterministic for
+    # duplicate rows on every backend (unlike raw .at[].set)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(scatter_ref(table, idx, vals, mode)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_duplicate_addresses_last_writer_wins(rng):
+    """Same-address writes keep arrival order through the scheduler's
+    stable sort — the weak-consistency rule on the write path."""
+    table = jnp.zeros((16, 4), jnp.float32)
+    idx = jnp.asarray([7, 2, 7, 7, 2], jnp.int32)
+    vals = jnp.asarray(
+        [[i + 1.0] * 4 for i in range(5)], jnp.float32)
+    for sched in (True, False):
+        out = np.asarray(MemoryController(_cfg(sched=sched)).scatter(
+            table, idx, vals))
+        np.testing.assert_array_equal(out[7], [4.0] * 4)  # arrival 3 last
+        np.testing.assert_array_equal(out[2], [5.0] * 4)  # arrival 4 last
+
+
+def test_scatter_add_toggle_identity_bf16():
+    """bf16 tables: scheduler on/off must agree — both accumulate runs
+    in f32 and round once, so small addends aren't swallowed on one
+    path only (the failure mode of per-element bf16 adds)."""
+    table = jnp.full((4, 2), 256.0, jnp.bfloat16)
+    idx = jnp.zeros((128,), jnp.int32)
+    vals = jnp.full((128, 2), 0.5, jnp.bfloat16)
+    on = MemoryController(_cfg(sched=True)).scatter(table, idx, vals,
+                                                    mode="add")
+    off = MemoryController(_cfg(sched=False)).scatter(table, idx, vals,
+                                                      mode="add")
+    np.testing.assert_array_equal(np.asarray(on, np.float32),
+                                  np.asarray(off, np.float32))
+    assert float(on[0, 0]) == 320.0     # 256 + 128*0.5, not swallowed
+
+
+def test_cached_scatter_keeps_hot_rows_coherent(rng):
+    table = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    hot = np.sort(rng.choice(64, 16, replace=False))
+    cache = HotRowCache.build(table, hot_ids=hot)
+    mc = MemoryController(_cfg())
+    idx = jnp.asarray(rng.integers(0, 64, 40), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal((40, 8)), jnp.float32)
+    new_table, new_cache = mc.cached_scatter(table, idx, vals, cache)
+    # a cached gather after the write must see the written values
+    out = mc.cached_gather(new_table, idx, new_cache)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(new_table[idx]), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dma", [True, False])
+def test_bulk_write_identity(dma, rng):
+    mc = MemoryController(_cfg(dma=dma))
+    dst = jnp.asarray(rng.standard_normal((32, 100)), jnp.float32)
+    src = jnp.asarray(rng.standard_normal((7, 100)), jnp.float32)
+    out = mc.bulk_write(dst, src, offset_elems=250)
+    ref = np.array(dst).reshape(-1)
+    ref[250:250 + 700] = np.asarray(src).reshape(-1)
+    np.testing.assert_array_equal(np.asarray(out).reshape(-1), ref)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=120),
+       st.sampled_from(["set", "add"]))
+def test_property_sorted_scatter_identity(ids, mode):
+    table = jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4)
+    idx = jnp.asarray(ids, jnp.int32)
+    vals = (jnp.arange(len(ids), dtype=jnp.float32)[:, None]
+            * jnp.ones((1, 4)))
+    out = sorted_scatter(table, idx, vals, mode=mode)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(scatter_ref(table, idx, vals, mode)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_modeled_access_time_improves_with_scheduler(rng):
+    rows = rng.integers(0, 256, 2048)
+    rw = rng.integers(0, 2, 2048)
+    on = MemoryController(_cfg(sched=True)).modeled_access_time(rows, rw,
+                                                                512)
+    off = MemoryController(_cfg(sched=False)).modeled_access_time(rows, rw,
+                                                                  512)
+    assert on.total_fpga_cycles < off.total_fpga_cycles
 
 
 def test_modeled_gather_time_improves_with_scheduler(rng):

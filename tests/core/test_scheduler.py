@@ -6,8 +6,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.config import SchedulerConfig
-from repro.core.scheduler import (READ, WRITE, form_batches, reorder_batch,
-                                  schedule_trace, sort_requests)
+from repro.core.scheduler import (READ, WRITE, form_batches,
+                                  form_batches_typed, reorder_batch,
+                                  schedule_trace, schedule_trace_rw,
+                                  sort_requests)
 from repro.core.timing import DDR4_2400
 
 
@@ -59,6 +61,63 @@ def test_property_weak_consistency(reqs, batch_size):
             assert (np.diff(seqs) > 0).all()                 # same-addr order
         start += n
     assert start == len(reqs)
+
+
+def test_typed_batches_survive_interleaved_rw():
+    """Dual queues: an alternating R/W stream still forms full batches of
+    each type (the single-queue former degenerates to size-1 batches)."""
+    cfg = SchedulerConfig(batch_size=8)
+    n = 32
+    rw = [READ, WRITE] * (n // 2)
+    single = _batches(np.arange(n), rw, cfg)
+    assert max(len(b) for b in single) == 1
+    typed = list(form_batches_typed(np.arange(n), rw, config=cfg))
+    assert [len(b) for b in typed] == [8, 8, 8, 8]
+    rw_arr = np.asarray(rw)
+    assert all((rw_arr[b.seq] == b.rw).all() for b in typed)  # purity
+
+
+def test_typed_batches_preserve_same_type_order():
+    """Within a type, arrival order of requests is preserved (stable
+    queues) — the weak-consistency guarantee for writes."""
+    cfg = SchedulerConfig(batch_size=64)
+    addrs = [3, 10, 3, 7, 3]
+    rw = [WRITE, READ, WRITE, READ, WRITE]
+    typed = list(form_batches_typed(addrs, rw, config=cfg))
+    wbatch = [b for b in typed if b.rw == WRITE][0]
+    np.testing.assert_array_equal(wbatch.addr, [3, 3, 3])
+    assert (np.diff(wbatch.seq) > 0).all()
+
+
+def test_typed_batches_close_on_timeout():
+    cfg = SchedulerConfig(batch_size=64, timeout_cycles=10)
+    arrival = [0, 1, 2, 50, 51, 52]
+    typed = list(form_batches_typed(np.arange(6), np.zeros(6, int),
+                                    arrival, config=cfg))
+    assert [len(b) for b in typed] == [3, 3]
+
+
+def test_schedule_trace_rw_is_permutation_with_single_type_runs():
+    rng = np.random.default_rng(3)
+    addrs = rng.integers(0, 64, 512) * 8192
+    rw = rng.integers(0, 2, 512)
+    cfg = SchedulerConfig(batch_size=64, bypass_sequential=False)
+    served, served_rw = schedule_trace_rw(addrs, rw, config=cfg)
+    assert sorted(served.tolist()) == sorted(addrs.tolist())
+    assert (np.sort(served_rw) == np.sort(rw)).all()
+    # single-type batches ⇒ far fewer bus-direction flips than arrival
+    flips_in = int((rw[1:] != rw[:-1]).sum())
+    flips_out = int((served_rw[1:] != served_rw[:-1]).sum())
+    assert flips_out < flips_in / 4
+
+
+def test_schedule_trace_rw_disabled_passthrough():
+    addrs = np.arange(16) * 64
+    rw = np.array([READ, WRITE] * 8)
+    served, served_rw = schedule_trace_rw(
+        addrs, rw, config=SchedulerConfig(enabled=False))
+    np.testing.assert_array_equal(served, addrs)
+    np.testing.assert_array_equal(served_rw, rw)
 
 
 def test_reorder_improves_row_hits(rng):

@@ -6,7 +6,8 @@ import pytest
 from repro.core.config import (MemoryControllerConfig, SchedulerConfig,
                                scheduler_sort_stages)
 from repro.core.timing import (DDR4_2400, DRAMTimings, simulate_dram_access,
-                               t_cache_trace, t_dma_transfer, t_schedule)
+                               t_cache_trace, t_dma_transfer, t_schedule,
+                               turnaround_cycles)
 
 
 def test_eq1_schedule_time():
@@ -40,6 +41,37 @@ def test_same_row_stream_is_all_hits():
     addrs = np.full(100, 8192 * 3) + np.arange(100) % 64
     r = simulate_dram_access(addrs)
     assert r.row_hits == 99 and r.first_accesses == 1
+
+
+def test_turnaround_cycles_counts_direction_edges():
+    t = DDR4_2400
+    assert turnaround_cycles([0, 0, 0], t) == 0
+    assert turnaround_cycles([0, 1], t) == t.t_rtw
+    assert turnaround_cycles([1, 0], t) == t.t_wtr
+    assert turnaround_cycles([0, 1, 0, 1], t) == 2 * t.t_rtw + t.t_wtr
+    assert turnaround_cycles([1], t) == 0
+    assert turnaround_cycles([], t) == 0
+
+
+def test_rw_stream_pays_turnaround_over_batched():
+    """Same addresses: alternating R/W costs more than reads-then-writes
+    (the single-type-batch economics of the scheduler)."""
+    addrs = np.tile(np.arange(64) * 64, 2)
+    alternating = np.array([0, 1] * 64)
+    batched = np.array([0] * 64 + [1] * 64)
+    t_alt = simulate_dram_access(addrs, rw=alternating).total_fpga_cycles
+    t_bat = simulate_dram_access(addrs, rw=batched).total_fpga_cycles
+    assert t_bat < t_alt
+    # without rw, request types don't exist and the two cost the same
+    legacy = simulate_dram_access(addrs).total_fpga_cycles
+    assert legacy < t_bat < t_alt
+
+
+def test_rw_none_matches_legacy_costing():
+    addrs = np.random.default_rng(0).integers(0, 1 << 20, 512) * 64
+    legacy = simulate_dram_access(addrs)
+    all_reads = simulate_dram_access(addrs, rw=np.zeros(512, np.int32))
+    assert legacy.total_fpga_cycles == all_reads.total_fpga_cycles
 
 
 def test_eq2_cache_trace_hits_cheaper():
