@@ -1,9 +1,12 @@
 """Benchmark harness utilities. Output contract: one CSV line per probe,
 ``name,us_per_call,derived`` (derived = the paper-claim metric the probe
-reproduces, e.g. an improvement percentage)."""
+reproduces, e.g. an improvement percentage). Probes that feed the repo's
+perf trajectory additionally write machine-readable ``BENCH_<name>.json``
+summaries via :func:`write_bench_json`."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable
 
@@ -32,3 +35,14 @@ def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 
 def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_bench_json(name: str, payload: dict, directory: str = ".") -> str:
+    """Persist a benchmark summary as ``BENCH_<name>.json`` so the perf
+    trajectory accumulates machine-readable artifacts (CI uploads them
+    per PR) instead of stdout-only CSV."""
+    path = f"{directory}/BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path

@@ -136,15 +136,28 @@ def run_workload(name, cache_addrs, bulk_addrs, bulk_bytes):
          f"improvement_vs_fifo={improvement_fifo:.1%}|"
          f"controller_cycles={ctrl:.0f}|cache_hit={hit_rate:.2f}|"
          f"dma_share={dma_cycles / ctrl:.0%}")
-    return improvement
+    return {
+        "improvement_vs_mig": round(improvement, 4),
+        "improvement_vs_fifo": round(improvement_fifo, 4),
+        "controller_cycles": round(ctrl),
+        "baseline_mig_cycles": round(base),
+        "baseline_fifo_cycles": round(base_fifo),
+        "cache_hit_rate": round(hit_rate, 4),
+        "dma_share": round(dma_cycles / ctrl, 4),
+    }
 
 
-def run() -> None:
+def run() -> dict:
+    """Returns per-workload modeled-improvement records; the runner
+    persists them as BENCH_fig7.json."""
     rng = np.random.default_rng(0)
     adj, feat, fb = gcn_trace(rng)
-    run_workload("gcn_inference", adj, feat, fb)
+    gcn = run_workload("gcn_inference", adj, feat, fb)
     w, inp, ib = cnn_trace(rng)
-    run_workload("cnn_inference", w, inp, ib)
+    cnn = run_workload("cnn_inference", w, inp, ib)
+    return {"benchmark": "fig7_modeled_access_time",
+            "paper_claim": {"gcn_inference": 0.27, "cnn_inference": 0.58},
+            "workloads": {"gcn_inference": gcn, "cnn_inference": cnn}}
 
 
 if __name__ == "__main__":

@@ -100,13 +100,26 @@ def run_workload(name: str, addrs: np.ndarray, rw: np.ndarray) -> float:
          f"writes_coalesced={addrs.shape[0] - served.shape[0]}|"
          f"row_hit_on={on.hit_rate:.2f}|row_hit_off={off.hit_rate:.2f}|"
          f"bus_turnarounds={n_flips}->{n_flips_served}")
-    return improvement
+    return {
+        "improvement_sched_on_vs_off": round(improvement, 4),
+        "on_cycles": round(on.total_fpga_cycles),
+        "off_cycles": round(off.total_fpga_cycles),
+        "writes_coalesced": int(addrs.shape[0] - served.shape[0]),
+        "row_hit_rate_on": round(on.hit_rate, 4),
+        "row_hit_rate_off": round(off.hit_rate, 4),
+        "bus_turnarounds_before": n_flips,
+        "bus_turnarounds_after": n_flips_served,
+    }
 
 
-def run() -> None:
+def run() -> dict:
+    """Returns per-workload modeled-improvement records; the runner
+    persists them as BENCH_fig7_write.json."""
     rng = np.random.default_rng(0)
-    run_workload("embedding_grad", *embedding_grad_trace(rng))
-    run_workload("kv_append", *kv_append_trace(rng))
+    eg = run_workload("embedding_grad", *embedding_grad_trace(rng))
+    kv = run_workload("kv_append", *kv_append_trace(rng))
+    return {"benchmark": "fig7_write_modeled_access_time",
+            "workloads": {"embedding_grad": eg, "kv_append": kv}}
 
 
 if __name__ == "__main__":

@@ -11,12 +11,19 @@ probe reproduces one published artifact:
   fig8    — interface-width sweep, 20x DMA advantage    (Fig. 8)
   fig9    — schedule-time breakdown, 32-64 optimum      (Fig. 9)
   autotune— TUNE-parameter search convergence           (§II, Table I)
+
+The paper-claim probes (fig7 / fig7w) also persist machine-readable
+``BENCH_fig7.json`` / ``BENCH_fig7_write.json`` summaries so the repo's
+perf trajectory accumulates per PR; ``benchmarks/perf_trace_engine.py``
+(run separately — it is minutes-long at full size) writes
+``BENCH_trace_engine.json`` for the simulator's own throughput.
 """
 
 from benchmarks import (autotune_bench, fig5_dma_resources,
                         fig6_scheduler_cost, fig7_workloads,
                         fig7_write_workloads, fig8_interface_width,
                         fig9_schedule_time, table3_cache_resources)
+from benchmarks.common import write_bench_json
 
 
 def main() -> None:
@@ -24,8 +31,8 @@ def main() -> None:
     table3_cache_resources.run()
     fig5_dma_resources.run()
     fig6_scheduler_cost.run()
-    fig7_workloads.run()
-    fig7_write_workloads.run()
+    write_bench_json("fig7", fig7_workloads.run())
+    write_bench_json("fig7_write", fig7_write_workloads.run())
     fig8_interface_width.run()
     fig9_schedule_time.run()
     autotune_bench.run()

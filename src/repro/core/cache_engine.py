@@ -110,17 +110,14 @@ def lookup(
     return new_state, hit, line_out
 
 
-def simulate_trace(
+def simulate_trace_seq(
     state: CacheState, line_ids: jnp.ndarray, table: jnp.ndarray,
 ) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray]:
-    """Service a *read* trace through the cache against backing ``table``.
-
-    ``table[line_id]`` plays DRAM. Returns (final_state, hits (N,) bool,
-    lines (N, line_elems)). Sequential scan = the shared-pipeline stall
-    semantics of the paper (one beat at a time through shared Tag/Data RAM).
-    Like :func:`lookup`, this path has no write-back port — flush dirty
-    state first, or use :func:`simulate_trace_rw` for mixed traces.
-    """
+    """Reference implementation of :func:`simulate_trace`: one
+    ``lax.scan`` beat per request, exactly the paper's shared-pipeline
+    stall semantics. O(N) sequential steps — kept as the oracle the
+    set-parallel engine is property-tested against, and as the fallback
+    for traced inputs / pathologically set-skewed traces."""
 
     def step(st, lid):
         new_st, hit, line = lookup(st, lid, table[lid])
@@ -128,6 +125,39 @@ def simulate_trace(
 
     final, (hits, lines) = jax.lax.scan(step, state, line_ids)
     return final, hits, lines
+
+
+def simulate_trace(
+    state: CacheState, line_ids: jnp.ndarray, table: jnp.ndarray,
+    *, engine: str = "auto",
+) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray]:
+    """Service a *read* trace through the cache against backing ``table``.
+
+    ``table[line_id]`` plays DRAM. Returns (final_state, hits (N,) bool,
+    lines (N, line_elems)). Like :func:`lookup`, this path has no
+    write-back port — flush dirty state first, or use
+    :func:`simulate_trace_rw` for mixed traces.
+
+    ``engine`` selects the execution strategy — never the semantics (the
+    two are bit-identical, see ``trace_engine``):
+
+    * ``"auto"`` (default) — set-parallel engine when the trace is
+      concrete, long enough, and the starting state is dirty-free (this
+      path's no-write-back-port contract); sequential scan otherwise.
+    * ``"parallel"`` — force the set-parallel engine.
+    * ``"sequential"`` — force the one-beat-per-request reference scan.
+    """
+    from repro.core import trace_engine
+
+    if engine == "sequential":
+        return simulate_trace_seq(state, line_ids, table)
+    if engine == "parallel":
+        return trace_engine.simulate_trace_parallel(state, line_ids, table)
+    if engine != "auto":
+        raise ValueError(f"unknown engine {engine!r}")
+    if trace_engine.auto_parallel_ok(state, line_ids, table=table):
+        return trace_engine.simulate_trace_parallel(state, line_ids, table)
+    return simulate_trace_seq(state, line_ids, table)
 
 
 # ---------------------------------------------------------------------------
@@ -203,7 +233,7 @@ def access_rw(
     return new_state, table, hit, line_out
 
 
-def simulate_trace_rw(
+def simulate_trace_rw_seq(
     state: CacheState,
     line_ids: jnp.ndarray,
     rw: jnp.ndarray,
@@ -212,13 +242,9 @@ def simulate_trace_rw(
     *,
     config: CacheConfig,
 ) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Service a mixed read/write trace through the cache.
-
-    ``rw[i]`` is 0 (read) / 1 (write); ``write_lines[i]`` is the payload of
-    request i (ignored for reads). Returns (final_state, table', hits,
-    lines) — call :func:`flush` on the final state to push residual dirty
-    lines so ``table'`` matches the naive in-order write stream.
-    """
+    """Reference implementation of :func:`simulate_trace_rw`: strict
+    one-beat-at-a-time ``lax.scan`` over :func:`access_rw`. Kept as the
+    oracle for the set-parallel engine and as the fallback path."""
     wb = config.write_policy == "write_back"
 
     def step(carry, req):
@@ -231,6 +257,50 @@ def simulate_trace_rw(
     (final, table), (hits, lines) = jax.lax.scan(
         step, (state, table), (line_ids, rw, write_lines))
     return final, table, hits, lines
+
+
+def simulate_trace_rw(
+    state: CacheState,
+    line_ids: jnp.ndarray,
+    rw: jnp.ndarray,
+    write_lines: jnp.ndarray,
+    table: jnp.ndarray,
+    *,
+    config: CacheConfig,
+    engine: str = "auto",
+) -> Tuple[CacheState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Service a mixed read/write trace through the cache.
+
+    ``rw[i]`` is 0 (read) / 1 (write); ``write_lines[i]`` is the payload of
+    request i (ignored for reads). Returns (final_state, table', hits,
+    lines) — call :func:`flush` on the final state to push residual dirty
+    lines so ``table'`` matches the naive in-order write stream.
+
+    ``engine``: ``"auto"`` / ``"parallel"`` / ``"sequential"`` — execution
+    strategy only; results are bit-identical (see ``trace_engine``). The
+    parallel engine additionally requires every line id to fall inside
+    the table (``0 <= lid < table.shape[0]``) and uniform
+    table/data/payload dtypes, so its vectorized value reconstruction is
+    exact; ``"auto"`` checks this and falls back.
+    """
+    from repro.core import trace_engine
+
+    wb = config.write_policy == "write_back"
+    if engine == "sequential":
+        return simulate_trace_rw_seq(state, line_ids, rw, write_lines,
+                                     table, config=config)
+    if engine == "parallel":
+        return trace_engine.simulate_trace_rw_parallel(
+            state, line_ids, rw, write_lines, table, write_back=wb)
+    if engine != "auto":
+        raise ValueError(f"unknown engine {engine!r}")
+    if trace_engine.auto_parallel_ok(state, line_ids, rw=rw,
+                                     write_lines=write_lines, table=table,
+                                     rw_path=True):
+        return trace_engine.simulate_trace_rw_parallel(
+            state, line_ids, rw, write_lines, table, write_back=wb)
+    return simulate_trace_rw_seq(state, line_ids, rw, write_lines, table,
+                                 config=config)
 
 
 def flush(state: CacheState, table: jnp.ndarray
@@ -253,14 +323,12 @@ def flush(state: CacheState, table: jnp.ndarray
         state, dirty=jnp.zeros_like(state.dirty)), new_table
 
 
-def hit_rate_oracle(
+def hit_rate_oracle_seq(
     config: CacheConfig, line_ids: np.ndarray
 ) -> Tuple[np.ndarray, float]:
-    """Fast numpy LRU-cache reference (no data movement) — hit mask + rate.
-
-    Used by benchmarks where only the hit/miss classification feeds the
-    timing model (Eq. 2) and by hypothesis tests as an independent oracle.
-    """
+    """Reference implementation of :func:`hit_rate_oracle` — one python
+    dict per set, one iteration per request. Kept as the independent
+    oracle the vectorized version is property-tested against."""
     sets, ways = config.num_sets, config.associativity
     tags = [dict() for _ in range(sets)]      # set -> {tag: last_use}
     hits = np.zeros(line_ids.shape[0], dtype=bool)
@@ -273,3 +341,62 @@ def hit_rate_oracle(
             del entry[min(entry, key=entry.get)]
         entry[t] = i
     return hits, float(hits.mean()) if hits.size else 0.0
+
+
+def hit_rate_oracle(
+    config: CacheConfig, line_ids: np.ndarray
+) -> Tuple[np.ndarray, float]:
+    """Fast numpy LRU-cache reference (no data movement) — hit mask + rate.
+
+    Used by benchmarks where only the hit/miss classification feeds the
+    timing model (Eq. 2) and by hypothesis tests as an independent oracle.
+
+    Set-parallel vectorization: all sets advance in lockstep over their
+    per-set subtraces (padded to the longest), with numpy ``(sets, ways)``
+    tag/age arrays replacing the per-set python dicts — ``max_per_set``
+    python iterations instead of N. Ages are global arrival indices
+    (unique), so LRU victims are identical to the sequential dict walk.
+
+    The lockstep walk costs ``max_per_set`` iterations of ``(sets, ways)``
+    array work, so a heavily set-skewed trace (hot set ≫ average) gains
+    nothing over the dict walk — when average parallelism
+    (``n / max_per_set``) is small the identical sequential oracle is
+    used instead.
+    """
+    sets, ways = config.num_sets, config.associativity
+    lids = np.asarray(line_ids, dtype=np.int64).ravel()
+    n = lids.shape[0]
+    hits = np.zeros(n, dtype=bool)
+    if n == 0:
+        return hits, 0.0
+    set_idx = lids % sets
+    tag = lids // sets
+    perm = np.argsort(set_idx, kind="stable")
+    counts = np.bincount(set_idx, minlength=sets)
+    depth = int(counts.max())
+    if n < 128 * depth:                # skewed / tiny: dict walk is faster
+        return hit_rate_oracle_seq(config, lids)
+    # Padded (sets, depth) per-set subtraces; row-major boolean fill of the
+    # grouped order lands request k of set s at [s, k].
+    mask = np.arange(depth)[None, :] < counts[:, None]
+    tag_pad = np.zeros((sets, depth), np.int64)
+    tag_pad[mask] = tag[perm]
+    idx_pad = np.zeros((sets, depth), np.int64)
+    idx_pad[mask] = perm
+
+    tags_arr = np.zeros((sets, ways), np.int64)
+    valid = np.zeros((sets, ways), bool)
+    age = np.full((sets, ways), -1, np.int64)   # empty ways always win LRU
+    rows = np.arange(sets)
+    for j in range(depth):
+        live = mask[:, j]
+        t = tag_pad[:, j]
+        match = valid & (tags_arr == t[:, None])
+        hit = match.any(axis=1)
+        way = np.where(hit, match.argmax(axis=1), age.argmin(axis=1))
+        r, w = rows[live], way[live]
+        tags_arr[r, w] = t[live]
+        valid[r, w] = True
+        age[r, w] = idx_pad[live, j]
+        hits[idx_pad[live, j]] = hit[live]
+    return hits, float(hits.mean())

@@ -116,6 +116,12 @@ class HotRowCache:
 
     def gather(self, table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
         idx = indices.reshape(-1)
+        # Empty hot set: clipping searchsorted positions to [0, H-1] would
+        # wrap to -1 and index from the end — there is nothing to hit, so
+        # serve everything from memory. (H is static under jit.)
+        if self.hot_ids.shape[0] == 0:
+            return jnp.take(table, idx, axis=0).reshape(
+                *indices.shape, table.shape[-1])
         pos = jnp.searchsorted(self.hot_ids, idx)
         pos = jnp.clip(pos, 0, self.hot_ids.shape[0] - 1)
         hit = self.hot_ids[pos] == idx
@@ -126,6 +132,8 @@ class HotRowCache:
 
     def hit_mask(self, indices: jnp.ndarray) -> jnp.ndarray:
         idx = indices.reshape(-1)
+        if self.hot_ids.shape[0] == 0:      # see gather: all-miss, no wrap
+            return jnp.zeros(idx.shape, bool)
         pos = jnp.clip(jnp.searchsorted(self.hot_ids, idx), 0,
                        self.hot_ids.shape[0] - 1)
         return self.hot_ids[pos] == idx

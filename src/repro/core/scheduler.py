@@ -15,8 +15,17 @@ Two planes:
   scheduler.
 * **Data plane** (`reorder_batch` / `sort_requests`) — device-side stable
   key sort; dispatches to the Pallas bitonic kernel on TPU and to
-  ``jnp.argsort(..., stable=True)`` elsewhere. The fused
-  ``repro.core.controller.mc_gather`` consumes this.
+  ``jnp.argsort(..., stable=True)`` elsewhere. The fused gather consumers
+  are ``repro.core.controller.sorted_gather`` and the model-side
+  ``repro.models.layers.mc_embed`` / ``mc_scatter`` wrappers.
+
+Both batch formers compute their boundaries *vectorized* (type-change
+segmentation + per-batch searchsorted over a restart cummax of the
+arrival cycles — one python iteration per emitted batch, not per
+request); the generator API is a thin wrapper that slices the planned
+boundaries. The original request-at-a-time walks are kept as
+``form_batches_seq`` / ``form_batches_typed_seq`` — the oracles the
+planners are property-tested against.
 """
 
 from __future__ import annotations
@@ -79,7 +88,7 @@ def _normalize_trace(addrs, rw, arrival_cycle, pe_id, sizes):
     return addrs, rw_arr, arrival_cycle, pe_id, sizes
 
 
-def form_batches(
+def form_batches_seq(
     addrs: Sequence[int],
     rw: Sequence[int],
     arrival_cycle: Sequence[int] | None = None,
@@ -88,13 +97,9 @@ def form_batches(
     *,
     config: SchedulerConfig,
 ) -> Iterator[RequestBatch]:
-    """Segment a request trace into scheduler batches.
-
-    A batch closes when (a) it reaches ``config.batch_size`` requests,
-    (b) the gap since the batch's first request exceeds
-    ``config.timeout_cycles`` (deadlock avoidance under low traffic), or
-    (c) the request type flips read<->write (single-type batches).
-    """
+    """Reference implementation of :func:`form_batches` — one python
+    iteration per request. Kept as the oracle the vectorized boundary
+    planner is property-tested against."""
     addrs, rw_arr, arrival_cycle, pe_id, sizes = _normalize_trace(
         addrs, rw, arrival_cycle, pe_id, sizes)
     n = addrs.shape[0]
@@ -123,7 +128,53 @@ def form_batches(
                 break
 
 
-def form_batches_typed(
+def _first_timeout(arrival: np.ndarray, lo: int, hi: int,
+                   head_cycle: int, timeout: int) -> int | None:
+    """First global step ``i`` in ``(lo, hi]`` whose arrival exceeds
+    ``head_cycle + timeout``, or None. Uses a restart running-max so the
+    probe is a single searchsorted even on non-monotone arrival streams
+    (``arrival[i] > thr`` first holds exactly where ``cummax > thr``)."""
+    win = arrival[lo + 1:hi + 1]
+    if not win.size:
+        return None
+    cm = np.maximum.accumulate(win)
+    pos = int(np.searchsorted(cm, head_cycle + timeout, side="right"))
+    return lo + 1 + pos if pos < win.size else None
+
+
+def _single_queue_bounds(rw_arr: np.ndarray, arrival: np.ndarray,
+                         config: SchedulerConfig) -> list[tuple[int, int]]:
+    """Batch boundary plan for the single-queue former.
+
+    Type flips are fixed closing points (every request in a batch shares
+    ``rw[start]``, so a flip vs the start is a flip vs the predecessor):
+    segment the trace at ``diff(rw) != 0``, then walk each segment one
+    *batch* at a time — the close point is the earlier of the size rule
+    (``start + batch_size``) and the first timeout inside that span.
+    """
+    n = rw_arr.shape[0]
+    seg_edges = np.concatenate(
+        [[0], np.flatnonzero(np.diff(rw_arr) != 0) + 1, [n]])
+    # Saturated-traffic regime (constant arrival cycles — the default):
+    # gaps are all zero, the timeout can never fire, and boundaries are
+    # pure arithmetic.
+    timeouts_possible = n > 0 and bool((arrival != arrival[0]).any())
+    bounds: list[tuple[int, int]] = []
+    for a, b in zip(seg_edges[:-1], seg_edges[1:]):
+        s = int(a)
+        while s < b:
+            e = min(s + config.batch_size, int(b))
+            if timeouts_possible:
+                t = _first_timeout(arrival, s, e - 1, int(arrival[s]),
+                                   config.timeout_cycles)
+                if t is not None:
+                    e = t
+            bounds.append((s, e))
+            s = e
+    return bounds
+
+
+def form_batches(
     addrs: Sequence[int],
     rw: Sequence[int],
     arrival_cycle: Sequence[int] | None = None,
@@ -132,7 +183,40 @@ def form_batches_typed(
     *,
     config: SchedulerConfig,
 ) -> Iterator[RequestBatch]:
-    """Dual-queue batch formation: one pending batch per request type.
+    """Segment a request trace into scheduler batches.
+
+    A batch closes when (a) it reaches ``config.batch_size`` requests,
+    (b) the gap since the batch's first request exceeds
+    ``config.timeout_cycles`` (deadlock avoidance under low traffic), or
+    (c) the request type flips read<->write (single-type batches).
+
+    Boundaries are planned vectorized (one python iteration per *batch*);
+    identical output to :func:`form_batches_seq`.
+    """
+    addrs, rw_arr, arrival_cycle, pe_id, sizes = _normalize_trace(
+        addrs, rw, arrival_cycle, pe_id, sizes)
+    for s, e in _single_queue_bounds(rw_arr, arrival_cycle, config):
+        yield RequestBatch(
+            pe_id=pe_id[s:e],
+            rw=int(rw_arr[s]),
+            addr=addrs[s:e],
+            size=sizes[s:e],
+            seq=np.arange(s, e, dtype=np.int64),
+        )
+
+
+def form_batches_typed_seq(
+    addrs: Sequence[int],
+    rw: Sequence[int],
+    arrival_cycle: Sequence[int] | None = None,
+    pe_id: Sequence[int] | None = None,
+    sizes: Sequence[int] | None = None,
+    *,
+    config: SchedulerConfig,
+) -> Iterator[RequestBatch]:
+    """Reference implementation of :func:`form_batches_typed` — one python
+    iteration (and queue append) per request. Kept as the oracle the
+    vectorized planner is property-tested against.
 
     The FPGA's double-buffered input queues let reads and writes
     accumulate *concurrently*; a read↔write flip in the arrival stream
@@ -178,6 +262,84 @@ def form_batches_typed(
         yield emit(t)
 
 
+def _typed_batch_plan(rw_arr: np.ndarray, arrival: np.ndarray,
+                      config: SchedulerConfig):
+    """Emission plan for the dual-queue former, one python iteration per
+    *batch*.
+
+    The two queues never interact (each emits based only on its own head
+    and the global arrival stream), so each type's batch boundaries are
+    walked independently over that type's request positions; emissions
+    are then merged by event key ``(global_step, phase, tiebreak)`` —
+    a timeout fires *before* the arriving request is appended (phase 0,
+    READ queue checked first), a size-full batch emits right after the
+    append (phase 1), and end-of-trace flushes drain oldest head first
+    (phase 2).
+    """
+    n = rw_arr.shape[0]
+    B, T = config.batch_size, config.timeout_cycles
+    timeouts_possible = n > 0 and bool((arrival != arrival[0]).any())
+    events: list[tuple[tuple[int, int, int], int, np.ndarray]] = []
+    for t_order, t in enumerate((READ, WRITE)):
+        idxs = np.flatnonzero(rw_arr == t)
+        m = idxs.shape[0]
+        p = 0
+        while p < m:
+            h = int(idxs[p])
+            size_p = p + B - 1
+            limit = int(idxs[size_p]) if size_p < m else n - 1
+            t_out = _first_timeout(arrival, h, limit, int(arrival[h]), T) \
+                if timeouts_possible else None
+            if t_out is not None:
+                q = int(np.searchsorted(idxs, t_out, side="left"))
+                events.append(((t_out, 0, t_order), t, idxs[p:q]))
+                p = q
+            elif size_p < m:
+                events.append(((limit, 1, t_order), t, idxs[p:p + B]))
+                p = p + B
+            else:
+                events.append(((n, 2, h), t, idxs[p:]))
+                p = m
+    events.sort(key=lambda e: e[0])
+    return events
+
+
+def form_batches_typed(
+    addrs: Sequence[int],
+    rw: Sequence[int],
+    arrival_cycle: Sequence[int] | None = None,
+    pe_id: Sequence[int] | None = None,
+    sizes: Sequence[int] | None = None,
+    *,
+    config: SchedulerConfig,
+) -> Iterator[RequestBatch]:
+    """Dual-queue batch formation: one pending batch per request type.
+
+    The FPGA's double-buffered input queues let reads and writes
+    accumulate *concurrently*; a read↔write flip in the arrival stream
+    parks the request in the other queue instead of closing the current
+    batch. On mixed streams this yields full-size single-type batches —
+    the property that amortizes both the sort (Eq. 1) and the bus
+    turnaround (tWTR/tRTW) — where the single-queue ``form_batches``
+    degenerates to tiny batches.
+
+    Consistency: same-address same-type order is preserved (stable queues);
+    a read is *not* ordered against a concurrent write to the same address
+    — exactly the paper's weak consistency model. Request streams that
+    need read-after-write ordering must fence (close batches) between the
+    write and the read.
+
+    Batch membership is planned vectorized (one python iteration per
+    batch, see :func:`_typed_batch_plan`); identical output to
+    :func:`form_batches_typed_seq`.
+    """
+    addrs, rw_arr, arrival_cycle, pe_id, sizes = _normalize_trace(
+        addrs, rw, arrival_cycle, pe_id, sizes)
+    for _key, t, q in _typed_batch_plan(rw_arr, arrival_cycle, config):
+        yield RequestBatch(pe_id=pe_id[q], rw=t, addr=addrs[q],
+                           size=sizes[q], seq=q.astype(np.int64))
+
+
 def reorder_batch(
     batch: RequestBatch, timings: DRAMTimings = DDR4_2400
 ) -> RequestBatch:
@@ -211,6 +373,39 @@ def schedule_trace(
                              arrival_cycle=arrival_cycle)[0]
 
 
+def schedule_trace_rw_seq(
+    addrs: Sequence[int],
+    rw: Sequence[int],
+    *,
+    config: SchedulerConfig,
+    timings: DRAMTimings = DDR4_2400,
+    arrival_cycle: Sequence[int] | None = None,
+    coalesce_writes: bool = False,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Reference implementation of :func:`schedule_trace_rw` — a python
+    loop over batches, one ``argsort`` each. Kept as the seed path for
+    old-vs-new benchmarking and as the property-test oracle."""
+    if not config.enabled:
+        return (np.asarray(addrs, dtype=np.int64),
+                np.asarray(rw, dtype=np.int32))
+    out, out_rw = [], []
+    for batch in form_batches_typed_seq(addrs, rw, arrival_cycle,
+                                        config=config):
+        if config.bypass_sequential and _is_sequential(batch.addr, timings):
+            srv = batch.addr                # bypass path (paper §V-C)
+        else:
+            srv = reorder_batch(batch, timings).addr
+        if coalesce_writes and batch.rw == WRITE and srv.shape[0] > 1:
+            keep = np.ones(srv.shape[0], dtype=bool)
+            keep[1:] = srv[1:] != srv[:-1]
+            srv = srv[keep]
+        out.append(srv)
+        out_rw.append(np.full(srv.shape[0], batch.rw, dtype=np.int32))
+    if not out:
+        return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int32)
+    return np.concatenate(out), np.concatenate(out_rw)
+
+
 def schedule_trace_rw(
     addrs: Sequence[int],
     rw: Sequence[int],
@@ -235,25 +430,49 @@ def schedule_trace_rw(
     collapse to one HBM burst (last-writer-wins / accumulated add).
     Coalescing never crosses a batch boundary — each batch is a separate
     kernel invocation with its own flush.
+
+    The whole data plane is one vectorized pass: a single stable
+    ``lexsort`` on ``(batch, row, arrival)`` row-sorts every batch at
+    once (a batch that is already row-sorted — the §V-C bypass case — is
+    left untouched by a stable sort, so the bypass needs no separate
+    branch), and coalescing is one shifted comparison. Output is
+    identical to :func:`schedule_trace_rw_seq`.
     """
     if not config.enabled:
         return (np.asarray(addrs, dtype=np.int64),
                 np.asarray(rw, dtype=np.int32))
-    out, out_rw = [], []
-    for batch in form_batches_typed(addrs, rw, arrival_cycle, config=config):
-        if config.bypass_sequential and _is_sequential(batch.addr, timings):
-            srv = batch.addr                # bypass path (paper §V-C)
-        else:
-            srv = reorder_batch(batch, timings).addr
-        if coalesce_writes and batch.rw == WRITE and srv.shape[0] > 1:
-            keep = np.ones(srv.shape[0], dtype=bool)
-            keep[1:] = srv[1:] != srv[:-1]
-            srv = srv[keep]
-        out.append(srv)
-        out_rw.append(np.full(srv.shape[0], batch.rw, dtype=np.int32))
-    if not out:
+    addrs64, rw_arr, arr_cyc, _, _ = _normalize_trace(
+        addrs, rw, arrival_cycle, None, None)
+    events = _typed_batch_plan(rw_arr, arr_cyc, config)
+    if not events:
         return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int32)
-    return np.concatenate(out), np.concatenate(out_rw)
+    lens = np.fromiter((e[2].shape[0] for e in events), np.int64,
+                       len(events))
+    idx_cat = np.concatenate([e[2] for e in events])
+    batch_id = np.repeat(np.arange(lens.shape[0]), lens)
+    a = addrs64[idx_cat]
+    rows = timings.row_of(a)
+    # One stable sort on a fused (batch, row) key when the row range is
+    # non-negative and fits in int64 (~2x faster than a 2-key lexsort);
+    # stability keeps arrival order within equal rows — the
+    # weak-consistency rule. Negative rows (negative addresses) fall back
+    # to lexsort so batch keys can never overlap.
+    row_span = int(rows.max()) + 1 if rows.size else 1
+    if rows.size and int(rows.min()) >= 0 \
+            and row_span < (1 << 62) // (lens.shape[0] + 1):
+        perm = np.argsort(batch_id * row_span + rows, kind="stable")
+    else:
+        perm = np.lexsort((np.arange(a.shape[0]), rows, batch_id))
+    srv = a[perm]
+    srv_rw = np.repeat(
+        np.fromiter((e[1] for e in events), np.int32, len(events)), lens)
+    if coalesce_writes:
+        keep = np.ones(srv.shape[0], bool)
+        keep[1:] = ((srv[1:] != srv[:-1])
+                    | (batch_id[1:] != batch_id[:-1])
+                    | (srv_rw[1:] != WRITE))
+        srv, srv_rw = srv[keep], srv_rw[keep]
+    return srv, srv_rw
 
 
 def _is_sequential(addr: np.ndarray, timings: DRAMTimings) -> bool:

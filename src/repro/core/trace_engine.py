@@ -1,0 +1,574 @@
+"""Set-parallel trace engine — the cache simulator at array speed.
+
+The sequential cache engine (``cache_engine.simulate_trace(_rw)``) scans a
+trace one beat at a time: a million-request trace is a million
+``lax.scan`` steps, each touching a handful of lanes. This module exploits
+the one algorithmic fact that makes the LRU cache *exactly* parallel:
+
+**Set partition.** With ``set = line % num_sets`` every request touches
+only the state rows of its own set, every victim write-back lands on a
+line of the *same* set (``victim_line = tag * num_sets + set``), and every
+fill/write-through access of the backing table hits a row of the same set
+(``row % num_sets == set``). The trace, the cache state *and* the backing
+table therefore partition cleanly by set index: simulating the per-set
+subtraces independently — in any interleaving — produces bit-identical
+final state, hit flags, served lines and table contents to the strict
+one-beat-at-a-time scan.
+
+Two passes:
+
+1. **Tag pipeline** (``_tag_round``): the trace is grouped by set (stable
+   argsort — arrival order preserved within each set) and driven through
+   a ``lax.scan`` whose carry is only the control state
+   (``tags/valid/age/dirty`` — no Data RAM, no table), with all per-beat
+   inputs pre-arranged as contiguous ``(chunk, lanes)`` scan inputs so a
+   step is pure vector arithmetic (no random gathers). Because real
+   traces are skewed (a Zipf-hot line concentrates one set), subtraces
+   are processed in ``chunk``-beat *rounds*, each round advancing only
+   the lanes that still have work: total padded work is
+   ``Σ_s ceil(count_s / chunk) · chunk ≤ N + num_sets · chunk`` no matter
+   how skewed the trace. LRU ages stay bit-identical by stamping each
+   beat with its *global* arrival position (``clock0 + i + 1``).
+
+2. **Data reconstruction**: served lines, the final Data RAM and the
+   final backing table are recovered from the tag-pipeline outputs with
+   O(N log N) vectorized passes instead of being threaded through the
+   scan. The key invariant (maintained by every producer in this module
+   and by the FPGA design itself) is *clean-line coherence*: a valid
+   clean way's data always equals the backing-table row it caches, so
+   the value any read observes is simply the **last write to its line**
+   before it — a real trace write, the pre-trace content of an
+   initially-dirty way ("virtual write"), or, failing those, the
+   original table row. Victim flushes and write-through stores are then
+   per-line "latest event wins" scatters onto the table.
+
+Lane counts and chunk lengths are rounded to powers of two so repeated
+calls with similar trace shapes reuse the same compiled kernel.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+#: auto-dispatch guard: below this trace length the sequential scan's
+#: compile/compute cost is already trivial and set-parallel launch
+#: overhead is not worth paying.
+MIN_PARALLEL_TRACE = 256
+
+
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+def partition_by_set(line_ids: np.ndarray, num_sets: int):
+    """Group a trace by cache set, preserving arrival order within sets.
+
+    Returns ``(perm, starts, counts)``: ``perm`` stable-sorts the trace by
+    set index, so set ``s`` owns sorted positions
+    ``starts[s] : starts[s] + counts[s]`` (in arrival order).
+    """
+    set_idx = line_ids % num_sets
+    # num_sets ≤ 32768 (Table I ceiling) → uint16 stable sort is radix,
+    # ~4x faster than comparison sorting the int64 keys.
+    perm = np.argsort(set_idx.astype(np.uint16), kind="stable")
+    counts = np.bincount(set_idx, minlength=num_sets)
+    starts = np.zeros(num_sets, dtype=np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    return perm, starts, counts
+
+
+# ---------------------------------------------------------------------------
+# Pass 1 — tag pipeline (control state only)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("write_back",))
+def _tag_round(tags, valid, age, dirty, clock0, lane_ids,
+               tag_x, live_x, w_x, stamp_x, write_back):
+    """One chunk of beats for the lanes in ``lane_ids``.
+
+    ``lane_ids`` may be padded with the out-of-range id ``num_sets``:
+    gathers clamp to a harmless row, the all-False ``live_x`` column makes
+    every beat a no-op, and the write-back scatter drops the row (JAX
+    out-of-bounds scatter semantics), so padding lanes never touch state.
+    """
+    num_sets, ways = tags.shape
+    safe = jnp.clip(lane_ids, 0, num_sets - 1)
+
+    way_iota = jnp.arange(ways, dtype=jnp.int32)[None, :]
+
+    def step(carry, xs):
+        # One-hot selects/updates throughout: XLA:CPU lowers per-lane
+        # gather/scatter (x[rows, way], .at[rows, way].set) to scalar
+        # loops, so the way dimension (≤16) is handled with elementwise
+        # masks instead — the whole step is SIMD.
+        tg, vd, ag, dt = carry
+        tag, live, is_w, stamp = xs
+        match = vd & (tg == tag[:, None])
+        hit = jnp.any(match, axis=1)
+        way = jnp.where(hit, jnp.argmax(match, axis=1),
+                        jnp.argmin(ag, axis=1)).astype(jnp.int32)
+        oh = way_iota == way[:, None]
+        vic_tag = jnp.sum(jnp.where(oh, tg, 0), axis=1)
+        way_valid = jnp.any(vd & oh, axis=1)
+        way_dirty = jnp.any(dt & oh, axis=1)
+        evict = (~hit) & way_valid & way_dirty & live
+        keep_dirty = hit & way_dirty & ~is_w
+        new_dirty = (is_w | keep_dirty) if write_back else keep_dirty
+        stamp = clock0 + stamp
+        upd = oh & live[:, None]
+        tg = jnp.where(upd, tag[:, None], tg)
+        vd = vd | upd
+        ag = jnp.where(upd, stamp[:, None], ag)
+        dt = jnp.where(upd, new_dirty[:, None], dt)
+        return (tg, vd, ag, dt), (hit & live, way.astype(jnp.int8), evict,
+                                  vic_tag)
+
+    carry0 = (tags[safe], valid[safe], age[safe], dirty[safe])
+    (tg2, vd2, ag2, dt2), ys = jax.lax.scan(
+        step, carry0, (tag_x, live_x, w_x, stamp_x))
+    sc = jnp.where(lane_ids < num_sets, safe, num_sets)
+    return (tags.at[sc].set(tg2), valid.at[sc].set(vd2),
+            age.at[sc].set(ag2), dirty.at[sc].set(dt2)), ys
+
+
+#: hand the residual trace tail to the python finisher once at most this
+#: many lanes still have work ...
+FINISH_LANES = 64
+#: ... and at most this many beats remain. A narrow lax.scan pays ~10µs
+#: of fixed per-step cost regardless of width; a python walk over host
+#: state does a skewed hot-set's serial chain at ~1µs/beat.
+FINISH_BEATS = 100_000
+
+
+def _finish_python(state_arrays, lids_tail, rw_tail, stamps_tail,
+                   dests_tail, ways: int, write_back: bool, outs):
+    """Per-beat python walk for the residual (hot-set) subtraces.
+
+    ``state_arrays`` are host copies of (tags, valid, age, dirty);
+    mutated in place. Exactly the ``access_rw`` tag rules, including
+    first-match / first-min tie-breaking.
+    """
+    tg_h, vd_h, ag_h, dt_h, num_sets = state_arrays
+    hit_a, way_a, evict_a, victag_a = outs
+    for lid, is_w, stamp, dst in zip(lids_tail.tolist(), rw_tail.tolist(),
+                                     stamps_tail.tolist(),
+                                     dests_tail.tolist()):
+        s = lid % num_sets
+        tag = lid // num_sets
+        t_row, v_row = tg_h[s], vd_h[s]
+        a_row, d_row = ag_h[s], dt_h[s]
+        way = -1
+        for w in range(ways):
+            if v_row[w] and t_row[w] == tag:
+                way = w
+                break
+        hit = way >= 0
+        if not hit:
+            way = min(range(ways), key=a_row.__getitem__)
+        victag_a[dst] = t_row[way]
+        evict_a[dst] = (not hit) and v_row[way] and d_row[way]
+        hit_a[dst] = hit
+        way_a[dst] = way
+        keep = hit and d_row[way] and not is_w
+        t_row[way] = tag
+        v_row[way] = True
+        a_row[way] = stamp
+        d_row[way] = (is_w or keep) if write_back else keep
+
+
+def _run_tag_pipeline(state, lids: np.ndarray, rw: np.ndarray | None, *,
+                      write_back: bool):
+    """Drive the whole trace through chunked rounds of the tag pipeline.
+
+    Returns the final control state plus arrival-order outcome vectors:
+    ``hit``, ``way``, ``evict`` (dirty-victim eviction at this beat) and
+    ``vic_tag`` (tag of the way replaced at this beat).
+    """
+    n = lids.shape[0]
+    num_sets = int(state.tags.shape[0])
+    ways = int(state.tags.shape[1])
+    perm, starts, counts = partition_by_set(lids, num_sets)
+    tag_s = (lids[perm] // num_sets).astype(np.int32)
+    rw_s = (rw[perm] != 0) if rw is not None else np.zeros(n, bool)
+    stamp_s = (perm + 1).astype(np.int32)
+    chunk = _next_pow2(max(16, min(-(-n // num_sets), 65536)))
+    max_count = int(counts.max())
+
+    tags, valid, age, dirty = (state.tags, state.valid, state.age,
+                               state.dirty)
+    hit_a = np.zeros(n, bool)
+    way_a = np.zeros(n, np.int32)
+    evict_a = np.zeros(n, bool)
+    victag_a = np.zeros(n, np.int64)
+    offs = np.arange(chunk)
+    rounds = []          # (ys device arrays, live-lane count, host idx/mask)
+    r = 0
+    while r * chunk < max_count:
+        live = np.flatnonzero(counts > r * chunk).astype(np.int32)
+        if (r > 0 and live.shape[0] <= FINISH_LANES
+                and int((counts - r * chunk).clip(0).sum())
+                <= FINISH_BEATS):
+            break                       # skew tail → python finisher
+        k_pad = _next_pow2(max(1, live.shape[0]))
+        lane_ids = np.full(k_pad, num_sets, np.int32)
+        lane_ids[:live.shape[0]] = live
+        # (chunk, k) layouts built directly — contiguous scan rows, no
+        # transpose; dead slots hold garbage that live_x masks off.
+        idx = np.clip(starts[live][None, :] + (r * chunk + offs)[:, None],
+                      0, n - 1)
+        mask = np.zeros((chunk, k_pad), bool)
+        mask[:, :live.shape[0]] = (r * chunk + offs)[:, None] \
+            < counts[live][None, :]
+        pad = ((0, 0), (0, k_pad - live.shape[0]))
+        tag_x = np.pad(tag_s[idx], pad)
+        w_x = np.pad(rw_s[idx], pad)
+        stamp_x = np.pad(stamp_s[idx], pad)
+
+        (tags, valid, age, dirty), ys = _tag_round(
+            tags, valid, age, dirty, state.clock, jnp.asarray(lane_ids),
+            jnp.asarray(tag_x), jnp.asarray(mask), jnp.asarray(w_x),
+            jnp.asarray(stamp_x), write_back)
+        rounds.append((ys, live.shape[0], idx, mask))
+        r += 1
+    tail_from = r * chunk
+    # Unsort once at the end (the transfers drain the async dispatch
+    # queue; sorted position -> arrival slot via the set-sort perm).
+    for ys, k, idx, mask in rounds:
+        m = mask[:, :k]
+        dst = perm[idx[:, :k][m]]
+        hit_a[dst] = np.asarray(ys[0])[:, :k][m]
+        way_a[dst] = np.asarray(ys[1])[:, :k][m]
+        evict_a[dst] = np.asarray(ys[2])[:, :k][m]
+        victag_a[dst] = np.asarray(ys[3])[:, :k][m]
+    if tail_from < max_count:
+        # Residual hot-set chains: per-beat python walk on host copies of
+        # the few live sets' control state, then one scatter back.
+        live = np.flatnonzero(counts > tail_from)
+        spans = [(int(starts[s] + tail_from), int(starts[s] + counts[s]))
+                 for s in live]
+        sel = np.concatenate([np.arange(a, b) for a, b in spans])
+        clock0 = int(np.asarray(state.clock))
+        # int32-exact stamps (matching the in-kernel int32 add) before the
+        # python walk, so age comparisons and stored values are identical.
+        stamps_tail = ((stamp_s[sel].astype(np.int64) + clock0)
+                       & 0xFFFFFFFF).astype(np.uint32).astype(np.int32)
+        tg_h = np.asarray(tags).tolist()
+        vd_h = np.asarray(valid).tolist()
+        ag_h = np.asarray(age).tolist()
+        dt_h = np.asarray(dirty).tolist()
+        lids_sorted = lids[perm]
+        _finish_python((tg_h, vd_h, ag_h, dt_h, num_sets),
+                       lids_sorted[sel], rw_s[sel], stamps_tail, perm[sel],
+                       ways, write_back,
+                       (hit_a, way_a, evict_a, victag_a))
+        live_j = jnp.asarray(live)
+        tags = tags.at[live_j].set(
+            jnp.asarray(np.asarray(tg_h, np.int32)[live]))
+        valid = valid.at[live_j].set(jnp.asarray(np.asarray(vd_h)[live]))
+        age = age.at[live_j].set(
+            jnp.asarray(np.asarray(ag_h, np.int64).astype(np.int32)[live]))
+        dirty = dirty.at[live_j].set(jnp.asarray(np.asarray(dt_h)[live]))
+    set_idx = (lids % num_sets).astype(np.int64)
+    return (tags, valid, age, dirty), hit_a, way_a, evict_a, victag_a, \
+        set_idx
+
+
+# ---------------------------------------------------------------------------
+# Pass 2 — vectorized value reconstruction
+# ---------------------------------------------------------------------------
+
+def _resolve_last_writes(line_arr, val_arr):
+    """Per-line forward fill over *position-ordered* entries.
+
+    ``line_arr[k]`` is entry k's line; ``val_arr[k]`` is its value when it
+    is a write record and -1 when it is a query. Entries must already be
+    in position order (the callers build them in arrival order, virtual
+    writes first). Returns, per entry, the value of the latest record on
+    the same line at or before it (-1 if none).
+
+    A stable sort on the line key alone groups lines while preserving
+    position order (radix when lines fit uint16); the per-line fill is
+    then one global running max of record row-indices after lifting each
+    line's rows by a disjoint offset.
+    """
+    m = line_arr.shape[0]
+    if m == 0:
+        return np.empty(0, np.int64)
+    if 0 <= int(line_arr.min()) and int(line_arr.max()) < (1 << 16):
+        order = np.argsort(line_arr.astype(np.uint16), kind="stable")
+    else:
+        order = np.argsort(line_arr, kind="stable")
+    line_o, val_o = line_arr[order], val_arr[order]
+    gid = np.zeros(m, np.int64)
+    gid[1:] = np.cumsum(line_o[1:] != line_o[:-1])
+    ridx = np.where(val_o >= 0, np.arange(m), -1)
+    ffill = np.maximum.accumulate(ridx + gid * (m + 1)) - gid * (m + 1)
+    res = np.where(ffill >= 0, val_o[np.maximum(ffill, 0)], -1)
+    out = np.empty(m, np.int64)
+    out[order] = res
+    return out
+
+
+def _scatter_last(dst_np, idx, vals_np):
+    """``dst[idx] = vals`` where the *latest* duplicate wins (arrival
+    order = array order) — numpy fancy assignment resolves duplicates
+    last-wins. Mutates and returns ``dst_np``."""
+    dst_np[idx] = vals_np.astype(dst_np.dtype, copy=False)
+    return dst_np
+
+
+def _virtual_writes(state, num_sets, dirty_only: bool):
+    """Pre-trace line values resident in the cache, as (line, flat-way)
+    pairs. ``dirty_only``: clean ways mirror the table (the coherence
+    invariant), so only dirty ways carry values the table does not."""
+    valid = np.asarray(state.valid)
+    mask = valid & np.asarray(state.dirty) if dirty_only else valid
+    sets, ways = mask.shape
+    s_grid = np.repeat(np.arange(sets, dtype=np.int64), ways)
+    flat = np.flatnonzero(mask.reshape(-1))
+    lines = np.asarray(state.tags).reshape(-1).astype(np.int64)[flat] \
+        * num_sets + s_grid[flat]
+    return lines, flat
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def simulate_trace_parallel(state, line_ids, table):
+    """Set-parallel equivalent of ``cache_engine.simulate_trace_seq``.
+
+    Bit-identical final state / hits / lines; up to ``num_sets``-way
+    parallelism. Requires concrete ``line_ids`` and a dirty-free starting
+    state (the read path has no write-back port — the same contract as
+    ``cache_engine.lookup``; the auto dispatcher checks and falls back).
+    """
+    from repro.core.cache_engine import CacheState
+
+    lids = np.asarray(line_ids, dtype=np.int64)
+    n = int(lids.shape[0])
+    elems = state.data.shape[-1]
+    if n == 0:
+        return (state, jnp.zeros((0,), bool),
+                jnp.zeros((0, elems), state.data.dtype))
+    num_sets = int(state.tags.shape[0])
+    ways = int(state.tags.shape[1])
+
+    (tags, valid, age, dirty), hit_a, way_a, _, _, set_idx = \
+        _run_tag_pipeline(state, lids, None, write_back=False)
+
+    # Clean coherent state ⇒ every hit serves exactly the table row, and
+    # every miss fills from it: lines == table[lids] wholesale.
+    table_np = np.asarray(table)
+    lines_np = table_np[np.clip(lids, 0, table_np.shape[0] - 1)]
+    data_np = _scatter_last(
+        np.asarray(state.data).reshape(num_sets * ways, elems).copy(),
+        set_idx * ways + way_a, lines_np)
+    final = CacheState(tags=tags, valid=valid, age=age,
+                       data=jnp.asarray(data_np).reshape(num_sets, ways,
+                                                         elems),
+                       clock=state.clock + jnp.int32(n), dirty=dirty)
+    return final, jnp.asarray(hit_a), jnp.asarray(
+        lines_np.astype(np.asarray(state.data).dtype, copy=False))
+
+
+def simulate_trace_rw_parallel(state, line_ids, rw, write_lines, table, *,
+                               write_back: bool):
+    """Set-parallel equivalent of ``cache_engine.simulate_trace_rw_seq``.
+
+    Pass 1 resolves hits/ways/evictions; pass 2 reconstructs values: the
+    line a read observes is the latest same-line write before it (trace
+    write, or the pre-trace content of an initially dirty way, else the
+    original table row — clean ways mirror the table by the coherence
+    invariant), victim flushes carry the same resolved value, and the
+    final table applies flush/write-through events latest-wins per line.
+
+    Requires concrete ``line_ids``/``rw`` with every id in
+    ``[0, table_rows)`` and matching table/data/payload dtypes — the auto
+    dispatcher in ``cache_engine`` checks all of this and falls back.
+    """
+    from repro.core.cache_engine import CacheState
+
+    lids = np.asarray(line_ids, dtype=np.int64)
+    n = int(lids.shape[0])
+    elems = state.data.shape[-1]
+    if n == 0:
+        return (state, table, jnp.zeros((0,), bool),
+                jnp.zeros((0, elems), state.data.dtype))
+    num_sets = int(state.tags.shape[0])
+    ways = int(state.tags.shape[1])
+    rw_np = np.asarray(rw, np.int32)
+    is_w = rw_np != 0
+
+    (tags, valid, age, dirty), hit_a, way_a, evict_a, victag_a, set_idx = \
+        _run_tag_pipeline(state, lids, rw_np, write_back=write_back)
+
+    # --- value resolution (host-side; pure copies, bit-exact) ------------
+    # Value space: trace write payloads [0, n) ++ pre-trace way contents
+    # [n, n + sets*ways).
+    wl_np = np.asarray(write_lines).reshape(n, elems)
+    data0_np = np.asarray(state.data).reshape(num_sets * ways, elems)
+    table_np = np.asarray(table)
+
+    virt_lines, virt_flat = _virtual_writes(state, num_sets,
+                                            dirty_only=True)
+    w_pos = np.flatnonzero(is_w)
+    r_pos = np.flatnonzero(~is_w)
+    e_pos = np.flatnonzero(evict_a)
+    vic_line = victag_a[e_pos] * num_sets + set_idx[e_pos]
+
+    # Build the entry list already in position order: virtual writes
+    # first (pre-trace), then one entry per beat — a write is a record
+    # (its own payload index), a read is a query — with each dirty
+    # eviction's flush query slotted right beside its beat. Same-position
+    # entries are always on different lines, so their relative order is
+    # immaterial.
+    nv = virt_lines.shape[0]
+    slot = np.arange(n, dtype=np.int64) + nv
+    slot[1:] += np.cumsum(evict_a[:-1])
+    ev_slot = slot[e_pos] + 1
+    m = nv + n + e_pos.shape[0]
+    line_arr = np.empty(m, np.int64)
+    val_arr = np.full(m, -1, np.int64)
+    line_arr[:nv] = virt_lines
+    val_arr[:nv] = n + virt_flat
+    line_arr[slot] = lids
+    val_arr[slot[w_pos]] = w_pos
+    line_arr[ev_slot] = vic_line
+    lw_all = _resolve_last_writes(line_arr, val_arr)
+    lw_read = lw_all[slot[r_pos]]
+    lw_evict = lw_all[ev_slot]
+
+    def resolve(lw_idx):
+        """Gather values for resolved last-write indices (≥ 0)."""
+        out = np.empty((lw_idx.shape[0], elems), wl_np.dtype)
+        real = lw_idx < n
+        out[real] = wl_np[lw_idx[real]]
+        out[~real] = data0_np[lw_idx[~real] - n]
+        return out
+
+    # Reads: latest write else the original table row. Writes: payload.
+    lines_np = np.empty((n, elems), wl_np.dtype)
+    lines_np[w_pos] = wl_np[w_pos]
+    found = lw_read >= 0
+    lines_np[r_pos[found]] = resolve(lw_read[found])
+    lines_np[r_pos[~found]] = table_np[lids[r_pos[~found]]]
+
+    # Final Data RAM: the last beat to touch each way leaves its line.
+    data_np = _scatter_last(data0_np.copy(), set_idx * ways + way_a,
+                            lines_np)
+
+    # Final table: victim flushes (a dirty way was written — lw exists)
+    # plus, under write-through, every trace write; latest event per line
+    # wins.
+    flush_vals = resolve(np.maximum(lw_evict, 0))
+    if write_back:
+        ev_line, ev_pos = vic_line, e_pos
+        ev_vals = flush_vals
+    else:
+        ev_line = np.concatenate([vic_line, lids[w_pos]])
+        ev_pos = np.concatenate([e_pos, w_pos])
+        ev_vals = np.concatenate([flush_vals, wl_np[w_pos]], axis=0)
+    new_table = table
+    if ev_line.size:
+        # Clip like access_rw does. Trace-installed victims are in-bounds
+        # by the dispatcher's checks; this only fires on forced-parallel
+        # calls with out-of-range resident dirty lines (where auto would
+        # have fallen back to the sequential path).
+        ev_line = np.clip(ev_line, 0, table_np.shape[0] - 1)
+        order = np.lexsort((ev_pos, ev_line))
+        last = np.ones(order.shape[0], bool)
+        last[:-1] = ev_line[order][1:] != ev_line[order][:-1]
+        win = order[last]
+        table_out = table_np.copy()
+        table_out[ev_line[win]] = ev_vals[win].astype(table_np.dtype,
+                                                      copy=False)
+        new_table = jnp.asarray(table_out)
+
+    final = CacheState(
+        tags=tags, valid=valid, age=age,
+        data=jnp.asarray(data_np).reshape(num_sets, ways, elems),
+        clock=state.clock + jnp.int32(n), dirty=dirty)
+    return final, new_table, jnp.asarray(hit_a), jnp.asarray(lines_np)
+
+
+def _clean_ways_coherent(state, table) -> bool:
+    """The coherence precondition of the value-reconstruction pass: every
+    valid *clean* way's data must mirror the table row it caches (and the
+    cached line must exist in this table). True for any state/table pair
+    produced against the same table lineage by this module; a state
+    warmed against a *different* table fails and must take the
+    sequential path. NaNs compare unequal, which conservatively falls
+    back."""
+    num_sets, ways = state.tags.shape
+    valid = np.asarray(state.valid)
+    clean = valid & ~np.asarray(state.dirty)
+    if not clean.any():
+        return True
+    tags = np.asarray(state.tags).astype(np.int64)
+    lines = tags * num_sets + np.arange(num_sets, dtype=np.int64)[:, None]
+    if int(lines[clean].max()) >= table.shape[0] \
+            or int(lines[clean].min()) < 0:
+        return False
+    rows = np.asarray(table)[np.clip(lines, 0, table.shape[0] - 1)]
+    mismatch = (rows != np.asarray(state.data)).any(axis=-1)
+    return not bool((mismatch & clean).any())
+
+
+def auto_parallel_ok(state, line_ids, *, rw=None, write_lines=None,
+                     table=None, rw_path: bool = False) -> bool:
+    """Dispatcher predicate: can this call take the set-parallel path
+    with bit-identical results? Concrete inputs, big enough to matter,
+    not single-set degenerate, and the per-path preconditions — read:
+    dirty-free state; rw: in-bounds trace *and* resident-dirty line ids
+    + uniform dtypes; both: clean resident ways coherent with the passed
+    table (:func:`_clean_ways_coherent`)."""
+    if not (_is_concrete(line_ids) and _is_concrete(state.tags)):
+        return False
+    lids = np.asarray(line_ids)
+    n = lids.shape[0]
+    if n < MIN_PARALLEL_TRACE:
+        return False
+    num_sets = int(state.tags.shape[0])
+    # Degenerate skew: (almost) everything in one set is one serial
+    # chain — narrow scan rounds would be slower than the seed scan.
+    max_count = int(np.bincount(np.asarray(lids, np.int64) % num_sets,
+                                minlength=num_sets).max())
+    if max_count > max(FINISH_BEATS, n // 2):
+        return False
+    if not rw_path:
+        if table is not None and not _is_concrete(table):
+            return False
+        if table is not None and table.dtype != state.data.dtype:
+            return False
+        if bool(np.asarray(state.dirty).any()):
+            return False
+        # Negative ids wrap python-style through the sequential path's
+        # jnp gather; the parallel path clamps — keep them sequential.
+        if int(np.asarray(lids, np.int64).min(initial=0)) < 0:
+            return False
+        return table is None or _clean_ways_coherent(state, table)
+    if not (_is_concrete(rw) and _is_concrete(write_lines)
+            and _is_concrete(table)):
+        return False
+    if not (table.dtype == state.data.dtype == write_lines.dtype):
+        return False
+    lids64 = np.asarray(lids, np.int64)
+    if not bool(lids64.min() >= 0 and lids64.max() < table.shape[0]):
+        return False
+    # Resident dirty lines flush during the trace — their targets must be
+    # real table rows (the sequential path would clip; we fall back).
+    virt_lines, _ = _virtual_writes(state, num_sets, dirty_only=True)
+    if virt_lines.size and (int(virt_lines.min()) < 0
+                            or int(virt_lines.max()) >= table.shape[0]):
+        return False
+    return _clean_ways_coherent(state, table)

@@ -46,6 +46,19 @@ def test_hot_row_cache_identity(rng):
     assert bool(cache.hit_mask(hot_idx).all())
 
 
+def test_hot_row_cache_empty_hot_set_is_all_miss(rng):
+    """Regression: with zero pinned rows, searchsorted positions clipped
+    to H-1 = -1 used to index from the *end* of hot_ids and could report
+    spurious hits; the empty set must be all-miss and gather must be
+    value-identical to table[idx]."""
+    table = jnp.asarray(rng.standard_normal((64, 4)), jnp.float32)
+    cache = HotRowCache.build(table, hot_ids=np.empty(0, np.int32))
+    idx = jnp.asarray(rng.integers(0, 64, 33), jnp.int32)
+    assert not bool(cache.hit_mask(idx).any())
+    np.testing.assert_array_equal(np.asarray(cache.gather(table, idx)),
+                                  np.asarray(table[idx]))
+
+
 def test_bulk_read_identity(rng):
     mc = MemoryController(PAPER_EVAL_CONFIG)
     x = jnp.asarray(rng.standard_normal((64, 100)), jnp.float32)
