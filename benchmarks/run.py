@@ -16,7 +16,9 @@ The paper-claim probes (fig7 / fig7w) also persist machine-readable
 ``BENCH_fig7.json`` / ``BENCH_fig7_write.json`` summaries so the repo's
 perf trajectory accumulates per PR; ``benchmarks/perf_trace_engine.py``
 (run separately — it is minutes-long at full size) writes
-``BENCH_trace_engine.json`` for the simulator's own throughput.
+``BENCH_trace_engine.json`` for the simulator's own throughput, and
+``benchmarks/perf_channels.py`` (also separate) writes
+``BENCH_channels.json`` for the multi-channel/multi-port front end.
 """
 
 from benchmarks import (autotune_bench, fig5_dma_resources,

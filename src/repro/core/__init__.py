@@ -6,8 +6,12 @@ the DRAM/HBM cost model (Eq. 1-3) and the cycle-level simulator used for
 the paper-claim reproductions.
 """
 
-from repro.core.config import (CacheConfig, DMAConfig, MemoryControllerConfig,
-                               PAPER_EVAL_CONFIG, SchedulerConfig)
+from repro.core.channels import (AddressMap, ArbiterStats, ChannelSimResult,
+                                 arbitrate_ports, simulate_channels,
+                                 simulate_multiport_channels)
+from repro.core.config import (CacheConfig, ChannelConfig, DMAConfig,
+                               MemoryControllerConfig, PAPER_EVAL_CONFIG,
+                               SchedulerConfig)
 from repro.core.controller import (HotRowCache, MemoryController,
                                    sorted_gather, sorted_scatter)
 from repro.core.timing import (DDR4_2400, DRAMTimings, HBM_V5E,
@@ -15,9 +19,11 @@ from repro.core.timing import (DDR4_2400, DRAMTimings, HBM_V5E,
                                t_schedule, turnaround_cycles)
 
 __all__ = [
-    "CacheConfig", "DMAConfig", "MemoryControllerConfig", "SchedulerConfig",
-    "PAPER_EVAL_CONFIG", "HotRowCache", "MemoryController", "sorted_gather",
-    "sorted_scatter", "DDR4_2400", "HBM_V5E", "DRAMTimings",
-    "roofline_time_s", "simulate_dram_access", "t_schedule",
-    "turnaround_cycles",
+    "CacheConfig", "ChannelConfig", "DMAConfig", "MemoryControllerConfig",
+    "SchedulerConfig", "PAPER_EVAL_CONFIG", "HotRowCache",
+    "MemoryController", "sorted_gather", "sorted_scatter", "AddressMap",
+    "ArbiterStats", "ChannelSimResult", "arbitrate_ports",
+    "simulate_channels", "simulate_multiport_channels", "DDR4_2400",
+    "HBM_V5E", "DRAMTimings", "roofline_time_s", "simulate_dram_access",
+    "t_schedule", "turnaround_cycles",
 ]

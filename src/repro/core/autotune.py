@@ -17,12 +17,11 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import scheduler as sched
 from repro.core.cache_engine import hit_rate_oracle
-from repro.core.config import (CacheConfig, DMAConfig,
+from repro.core.channels import schedule_and_simulate_channels
+from repro.core.config import (CacheConfig, ChannelConfig, DMAConfig,
                                MemoryControllerConfig, SchedulerConfig)
-from repro.core.timing import (DRAMTimings, DDR4_2400, simulate_dram_access,
-                               t_schedule)
+from repro.core.timing import DRAMTimings, DDR4_2400, t_schedule
 
 
 @dataclasses.dataclass
@@ -38,26 +37,29 @@ def _score(
     row_ids: np.ndarray,
     row_bytes: int,
     timings: DRAMTimings,
+    hits: np.ndarray | None = None,
 ) -> float:
     """Modeled total access cycles for an irregular trace under ``cfg``.
 
     Cache hits are served on-chip (1 cycle); misses flow through the
     scheduler to DRAM. Batch scheduling adds Eq. 1 latency per batch but
     only the *first* batch is exposed (subsequent batch formation overlaps
-    DRAM service — paper Fig. 9 discussion).
+    DRAM service — paper Fig. 9 discussion). Misses are decomposed by the
+    configured AddressMap and serviced channel-parallel: the DRAM term is
+    the multi-channel *makespan* (slowest channel).
     """
     addrs = row_ids.astype(np.int64) * row_bytes
-    line_ids = addrs // cfg.cache.line_bytes
-    if cfg.cache.enabled:
-        hits, _ = hit_rate_oracle(cfg.cache, line_ids)
-    else:
-        hits = np.zeros(addrs.shape[0], dtype=bool)
+    if hits is None:        # precomputable per cache shape — see tune()
+        if cfg.cache.enabled:
+            hits, _ = hit_rate_oracle(cfg.cache,
+                                      addrs // cfg.cache.line_bytes)
+        else:
+            hits = np.zeros(addrs.shape[0], dtype=bool)
     miss_addrs = addrs[~hits]
 
-    served = sched.schedule_trace(
-        miss_addrs, np.zeros(miss_addrs.shape[0], np.int32),
-        config=cfg.scheduler, timings=timings)
-    dram = simulate_dram_access(served, timings)
+    dram = schedule_and_simulate_channels(
+        miss_addrs, sched_config=cfg.scheduler, timings=timings,
+        channel_cfg=cfg.channels)
 
     n_batches = max(1, -(-miss_addrs.shape[0] // cfg.scheduler.batch_size))
     first_batch = t_schedule(cfg.scheduler.batch_size) if \
@@ -80,36 +82,69 @@ def tune(
     associativities: Sequence[int] = (1, 2, 4, 8),
     num_lines: Sequence[int] = (1024, 4096, 16384),
     dma_channels: Sequence[int] = (1, 2, 4, 8),
+    num_channels: Sequence[int] = (1,),
+    mapping_policies: Sequence[str] = ("row_interleave",),
     enable_cache: bool = True,
     timings: DRAMTimings = DDR4_2400,
 ) -> TuneResult:
-    """Grid-search TUNE parameters for a trace under a VMEM budget."""
+    """Grid-search TUNE parameters for a trace under a VMEM budget.
+
+    ``num_channels`` × ``mapping_policies`` extend the grid with the
+    multi-channel front end's axes (``ChannelConfig``); the defaults keep
+    the paper's single-interface search space. With one channel every
+    mapping policy is the identity, so only the first policy is scored.
+    """
     row_ids = np.asarray(row_ids)
     best_cfg, best_cycles, table = None, float("inf"), []
     n_eval = 0
     cache_grid = (
         list(itertools.product(associativities, num_lines))
         if enable_cache else [(1, 256)])
+    chan_grid = [(nc, pol) for nc in num_channels
+                 for pol in (mapping_policies if nc > 1
+                             else mapping_policies[:1])]
+    # The LRU hit mask — the expensive full-trace scan — depends only on
+    # the cache shape, not on batch/dma/channel axes: compute it once per
+    # (ways, lines) instead of once per grid point.
+    hits_by_shape: dict[tuple[int, int], np.ndarray] = {}
+
+    def _hits(cache_cfg: CacheConfig) -> np.ndarray:
+        key = (cache_cfg.associativity, cache_cfg.num_lines)
+        if key not in hits_by_shape:
+            if cache_cfg.enabled:
+                addrs = row_ids.astype(np.int64) * row_bytes
+                hits_by_shape[key] = hit_rate_oracle(
+                    cache_cfg, addrs // cache_cfg.line_bytes)[0]
+            else:
+                hits_by_shape[key] = np.zeros(row_ids.shape[0], bool)
+        return hits_by_shape[key]
+
     for batch in batch_sizes:
         for ways, lines in cache_grid:
             if ways > lines:
                 continue
             for ch in dma_channels:
-                cfg = MemoryControllerConfig(
-                    scheduler=SchedulerConfig(batch_size=batch),
-                    cache=CacheConfig(enabled=enable_cache, num_lines=lines,
-                                      associativity=ways),
-                    dma=DMAConfig(num_parallel_dma=ch),
-                )
-                if cfg.vmem_footprint_bytes() > vmem_budget_bytes:
-                    continue
-                n_eval += 1
-                cycles = _score(cfg, row_ids, row_bytes, timings)
-                table.append((
-                    f"batch={batch} ways={ways} lines={lines} dma={ch}",
-                    cycles))
-                if cycles < best_cycles:
-                    best_cfg, best_cycles = cfg, cycles
+                for nc, policy in chan_grid:
+                    cfg = MemoryControllerConfig(
+                        scheduler=SchedulerConfig(batch_size=batch),
+                        cache=CacheConfig(enabled=enable_cache,
+                                          num_lines=lines,
+                                          associativity=ways),
+                        dma=DMAConfig(num_parallel_dma=ch),
+                        channels=ChannelConfig(num_channels=nc,
+                                               policy=policy),
+                    )
+                    if cfg.vmem_footprint_bytes() > vmem_budget_bytes:
+                        continue
+                    n_eval += 1
+                    cycles = _score(cfg, row_ids, row_bytes, timings,
+                                    hits=_hits(cfg.cache))
+                    table.append((
+                        f"batch={batch} ways={ways} lines={lines} "
+                        f"dma={ch} mem_ch={nc} map={policy}",
+                        cycles))
+                    if cycles < best_cycles:
+                        best_cfg, best_cycles = cfg, cycles
     if best_cfg is None:
         raise ValueError("no feasible configuration under the VMEM budget")
     return TuneResult(config=best_cfg, modeled_cycles=best_cycles,

@@ -1,0 +1,575 @@
+"""Multi-port, multi-channel front end — PE arbitration + address mapping
++ channel-parallel DRAM simulation.
+
+The paper's controller is explicitly *multi-port* (several PEs share one
+memory interface) and *memory-spec programmable*; HBM-class parts widen
+that picture to several independent DRAM channels behind one address
+space. This module is the layer between batch formation and the DRAM
+model that makes both concrete:
+
+1. **AddressMap** — decomposes a flat physical address into
+   ``(channel, bank, row)`` under a configurable interleave policy
+   (``ChannelConfig``): row-interleave, block-interleave, or XOR-permuted
+   block interleave (the classic fix for power-of-two stride camping).
+   The map is a bijection ``addr ↔ (channel, local_addr)``; bank/row are
+   then the ordinary ``DRAMTimings`` decode of the *local* address.
+
+2. **Multi-port arbiter** — merges per-``pe_id`` request streams into
+   per-channel service queues under round-robin / fixed-priority /
+   weighted-round-robin policies. Each port's stream is a FIFO, so
+   **per-port arrival order is preserved into every channel queue**
+   (the weak-consistency rule the scheduler relies on); per-port
+   grant/stall/fairness statistics are reported.
+
+3. **Channel-parallel simulation** — channels are *exactly* independent
+   after mapping: a request touches only its own channel's bank/row
+   state, and the per-channel rw substream (in arrival order) determines
+   that channel's bus turnarounds. The trace therefore partitions by
+   channel the same way the cache partitions by set (PR 2's argument),
+   so the fast path classifies every channel with the vectorized
+   :func:`repro.core.timing.simulate_dram_access` and aggregates
+   makespan = max over channels + arbitration fill. The strict
+   one-request-at-a-time walk is kept as ``simulate_channels_seq`` — the
+   oracle the fast path is property-tested against (bit-identical).
+
+Arbitration and mapping are host-side control plane (numpy), like the
+batch formers: they decide *order* and *cost*, never values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.config import ChannelConfig, SchedulerConfig
+from repro.core.timing import (DRAMTimings, DDR4_2400, SimResult,
+                               simulate_dram_access)
+
+ARBITER_POLICIES = ("round_robin", "priority", "weighted")
+
+
+# ---------------------------------------------------------------------------
+# 1. Address mapping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AddressMap:
+    """Configurable physical-address → (channel, bank, row) decomposition.
+
+    The channel-select field sits at ``granularity`` byte alignment
+    (``granularity = row_bytes`` for ``row_interleave``, else
+    ``interleave_bytes``). ``local_addr`` removes that field, compacting
+    each channel's share into a dense private address space — so per
+    channel, the ordinary open-row decode (``DRAMTimings.row_of`` /
+    ``bank_of``) applies unchanged, and the map is a bijection
+    ``addr ↔ (channel, local_addr)`` for every policy (the XOR policy
+    permutes *which* channel a block lands on, never the local image).
+    """
+
+    config: ChannelConfig
+    timings: DRAMTimings = dataclasses.field(
+        default_factory=lambda: DDR4_2400)
+
+    @property
+    def granularity(self) -> int:
+        if self.config.policy == "row_interleave":
+            return self.timings.row_bytes
+        return self.config.interleave_bytes
+
+    def channel_of(self, addr) -> np.ndarray:
+        addr = np.asarray(addr, dtype=np.int64)
+        c = self.config.num_channels
+        if c == 1:
+            return np.zeros_like(addr)
+        block = addr // self.granularity
+        if self.config.policy == "xor":
+            # Permutation-based interleave: XOR-fold *every* log2(c)-bit
+            # digit of the block index into the channel select, so any
+            # power-of-two stride (however far above the granularity)
+            # still touches all channels. Masking once at the end is
+            # exact: AND distributes over XOR. The fold stops at the
+            # widest occupied bit — higher shifts contribute zeros
+            # (negative blocks sign-extend, so they take all 64).
+            bits = c.bit_length() - 1
+            hi = int(block.max(initial=0))
+            max_bits = 64 if int(block.min(initial=0)) < 0 \
+                else max(1, hi.bit_length())
+            folded = np.zeros_like(block)
+            for shift in range(0, max_bits, bits):
+                folded ^= block >> shift
+            return (folded & (c - 1)).astype(np.int64)
+        return (block % c).astype(np.int64)
+
+    def local_addr(self, addr) -> np.ndarray:
+        """Address within the owning channel (channel-select field
+        removed). Dense per channel; keeps sub-block offsets."""
+        addr = np.asarray(addr, dtype=np.int64)
+        c = self.config.num_channels
+        if c == 1:
+            return addr
+        g = self.granularity
+        return (addr // g // c) * g + addr % g
+
+    def decompose(self, addr):
+        """``(channel, bank, row)`` of each address."""
+        local = self.local_addr(addr)
+        return (self.channel_of(addr), self.timings.bank_of(local),
+                self.timings.row_of(local))
+
+
+# ---------------------------------------------------------------------------
+# 2. Multi-port arbiter
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ArbiterStats:
+    """Per-port service statistics for one arbitrated queue."""
+
+    grants: np.ndarray       # (P,) requests granted to each port
+    stall_slots: np.ndarray  # (P,) grant slots a port waited with work
+    fairness: float          # Jain index over per-port grant counts
+
+    @staticmethod
+    def from_grant_order(ports: np.ndarray, num_ports: int) -> "ArbiterStats":
+        """Derive stats from the granted-port sequence (slot order).
+
+        A port *stalls* in every grant slot before its last grant that
+        went to a different port — it still had pending requests (FIFO
+        queues, saturated arrival) but was not picked.
+        """
+        ports = np.asarray(ports, dtype=np.int64)
+        grants = np.bincount(ports, minlength=num_ports)[:num_ports]
+        stalls = np.zeros(num_ports, dtype=np.int64)
+        if ports.size:
+            slots = np.arange(ports.size, dtype=np.int64)
+            last = np.full(num_ports, -1, dtype=np.int64)
+            last[ports] = slots          # fancy assignment: last wins
+            present = last >= 0
+            stalls[present] = last[present] + 1 - grants[present]
+        return ArbiterStats(grants=grants, stall_slots=stalls,
+                            fairness=_jain(grants))
+
+
+def _jain(grants: np.ndarray) -> float:
+    """Jain fairness index over the ports that received any service
+    (1.0 = perfectly even; → 1/n as one port dominates)."""
+    n_active = int((grants > 0).sum())
+    if n_active == 0:
+        return 1.0
+    g = grants[grants > 0].astype(np.float64)
+    return float(g.sum() ** 2 / (n_active * (g ** 2).sum()))
+
+
+def _normalize_weights(num_ports: int, policy: str,
+                       weights: Sequence[int] | None) -> np.ndarray:
+    if policy not in ARBITER_POLICIES:
+        raise ValueError(f"arbiter policy {policy!r} must be one of "
+                         f"{ARBITER_POLICIES}")
+    if policy != "weighted":
+        return np.ones(num_ports, dtype=np.int64)
+    if weights is None:
+        raise ValueError("policy='weighted' requires per-port weights")
+    w = np.asarray(weights, dtype=np.int64)
+    if w.shape != (num_ports,) or (w < 1).any():
+        raise ValueError("weights must be one positive integer per port")
+    return w
+
+
+def arbitrate_ports_seq(
+    pe_id: np.ndarray,
+    *,
+    num_ports: int,
+    policy: str = "round_robin",
+    weights: Sequence[int] | None = None,
+) -> tuple[np.ndarray, ArbiterStats]:
+    """Reference arbiter — an explicit grant-per-slot loop over per-port
+    FIFOs (saturated arrival: every request is pending from slot 0).
+    Kept as the oracle :func:`arbitrate_ports` is property-tested
+    against.
+
+    Returns ``(perm, stats)``: ``perm`` lists request indices (into the
+    input stream) in grant order; within each port the FIFO pop
+    preserves arrival order by construction.
+    """
+    pe = np.asarray(pe_id, dtype=np.int64)
+    if pe.size and (pe.min() < 0 or pe.max() >= num_ports):
+        raise ValueError("pe_id outside [0, num_ports)")
+    w = _normalize_weights(num_ports, policy, weights)
+    queues = [list(np.flatnonzero(pe == p)) for p in range(num_ports)]
+    heads = [0] * num_ports
+    out: list[int] = []
+    granted_port: list[int] = []
+    if policy == "priority":
+        # Fixed priority = ascending pe_id: the highest-priority port with
+        # pending work wins every slot, so lower ports drain first.
+        for p in range(num_ports):
+            out.extend(queues[p])
+            granted_port.extend([p] * len(queues[p]))
+    else:
+        # (Weighted) round robin with a rotating grant pointer: each full
+        # rotation grants every still-busy port up to weight[p] requests,
+        # ports in cyclic index order.
+        remaining = sum(len(q) for q in queues)
+        while remaining:
+            for p in range(num_ports):
+                q, h = queues[p], heads[p]
+                take = min(int(w[p]), len(q) - h)
+                for k in range(take):
+                    out.append(q[h + k])
+                    granted_port.append(p)
+                heads[p] += take
+                remaining -= take
+    perm = np.asarray(out, dtype=np.int64)
+    return perm, ArbiterStats.from_grant_order(
+        np.asarray(granted_port, dtype=np.int64), num_ports)
+
+
+def arbitrate_ports(
+    pe_id: np.ndarray,
+    *,
+    num_ports: int,
+    policy: str = "round_robin",
+    weights: Sequence[int] | None = None,
+) -> tuple[np.ndarray, ArbiterStats]:
+    """Vectorized arbiter — identical grant order to
+    :func:`arbitrate_ports_seq` via one stable sort.
+
+    Key construction: each request's position within its port's FIFO is
+    its cumulative count; under (weighted) round robin the request is
+    granted in rotation ``pos // weight[p]``, within a rotation ports go
+    in index order and a port's ``weight`` grants stay consecutive —
+    i.e. stable sort by ``(rotation, port, pos)``. Fixed priority is the
+    degenerate key ``(0, port, pos)``.
+    """
+    pe = np.asarray(pe_id, dtype=np.int64)
+    if pe.size and (pe.min() < 0 or pe.max() >= num_ports):
+        raise ValueError("pe_id outside [0, num_ports)")
+    w = _normalize_weights(num_ports, policy, weights)
+    n = pe.shape[0]
+    ones = np.ones(n, dtype=np.int64)
+    pos = np.zeros(n, dtype=np.int64)
+    for p in range(num_ports):          # cumcount per port (P ≤ 128)
+        m = pe == p
+        pos[m] = np.cumsum(ones[m]) - 1
+    rotation = np.zeros(n, dtype=np.int64) if policy == "priority" \
+        else pos // w[pe]
+    perm = np.lexsort((pos, pe, rotation))
+    return perm, ArbiterStats.from_grant_order(pe[perm], num_ports)
+
+
+def per_port_order_preserved(
+    pe_id: np.ndarray,
+    addrs: np.ndarray,
+    *,
+    num_ports: int,
+    channel_cfg: ChannelConfig = ChannelConfig(),
+    timings: DRAMTimings = DDR4_2400,
+    policy: str = "round_robin",
+    weights: Sequence[int] | None = None,
+) -> bool:
+    """Acceptance predicate: after mapping + arbitration, does every
+    port's substream enter every channel queue in arrival order? True by
+    construction (FIFO pop per port); exported so the property tests and
+    the benchmark's machine-readable record check the same thing."""
+    pe = np.asarray(pe_id, dtype=np.int64).ravel()
+    ch = AddressMap(channel_cfg, timings).channel_of(addrs)
+    for k in range(channel_cfg.num_channels):
+        sel = np.flatnonzero(ch == k)
+        perm, _ = arbitrate_ports(pe[sel], num_ports=num_ports,
+                                  policy=policy, weights=weights)
+        granted = sel[perm]
+        for p in range(num_ports):
+            mine = granted[pe[granted] == p]
+            if mine.size > 1 and not (np.diff(mine) > 0).all():
+                return False
+    return True
+
+
+def arbiter_fill_cycles(num_ports: int) -> int:
+    """Grant-path latency of a ``num_ports``-wide arbiter: a binary
+    grant/mux tree is ``ceil(log2(P))`` stages deep. The tree is
+    pipelined (one grant per cycle per channel once full), so only the
+    fill is exposed — charged once per simulation, in FPGA cycles."""
+    return int(math.ceil(math.log2(num_ports))) if num_ports > 1 else 0
+
+
+# ---------------------------------------------------------------------------
+# 3. Channel-parallel DRAM simulation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ChannelSimResult:
+    """Aggregate of per-channel open-row simulations.
+
+    ``makespan_fpga_cycles`` is the wall-clock model: channels service
+    their queues concurrently, so the trace completes when the slowest
+    channel drains, plus the (pipelined) arbitration fill.
+    ``busy_fpga_cycles`` is the summed occupancy (energy/utilization
+    view). Counts aggregate over channels.
+    """
+
+    makespan_fpga_cycles: float
+    busy_fpga_cycles: float
+    arbitration_cycles: float
+    per_channel: list[SimResult]
+    requests_per_channel: list[int]
+    port_stats: ArbiterStats | None = None
+
+    @property
+    def row_hits(self) -> int:
+        return sum(r.row_hits for r in self.per_channel)
+
+    @property
+    def row_conflicts(self) -> int:
+        return sum(r.row_conflicts for r in self.per_channel)
+
+    @property
+    def first_accesses(self) -> int:
+        return sum(r.first_accesses for r in self.per_channel)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.row_hits + self.row_conflicts + self.first_accesses
+        return self.row_hits / max(1, n)
+
+    @property
+    def total_fpga_cycles(self) -> float:
+        """Alias so a ChannelSimResult reads like a SimResult (the
+        modeled completion time of the whole trace)."""
+        return self.makespan_fpga_cycles
+
+    def as_sim_result(self) -> SimResult:
+        return SimResult(total_fpga_cycles=self.makespan_fpga_cycles,
+                         row_hits=self.row_hits,
+                         row_conflicts=self.row_conflicts,
+                         first_accesses=self.first_accesses)
+
+
+def _aggregate(per_channel: list[SimResult], counts: list[int],
+               arb_cycles: float,
+               port_stats: ArbiterStats | None = None) -> ChannelSimResult:
+    busy = float(sum(r.total_fpga_cycles for r in per_channel))
+    makespan = (max((r.total_fpga_cycles for r in per_channel),
+                    default=0.0) + arb_cycles)
+    return ChannelSimResult(
+        makespan_fpga_cycles=makespan, busy_fpga_cycles=busy,
+        arbitration_cycles=arb_cycles, per_channel=per_channel,
+        requests_per_channel=counts, port_stats=port_stats)
+
+
+def simulate_channels_seq(
+    addrs: np.ndarray,
+    timings: DRAMTimings = DDR4_2400,
+    channel_cfg: ChannelConfig = ChannelConfig(),
+    rw: np.ndarray | None = None,
+) -> ChannelSimResult:
+    """Reference channel simulator — one python iteration per request,
+    walking the global trace in arrival order against per-channel
+    per-bank open-row state (and per-channel last-direction state for
+    the tWTR/tRTW turnarounds). Kept as the oracle
+    :func:`simulate_channels` is property-tested against."""
+    amap = AddressMap(channel_cfg, timings)
+    addrs = np.asarray(addrs, dtype=np.int64).ravel()
+    c = channel_cfg.num_channels
+    ch = amap.channel_of(addrs)
+    banks = timings.bank_of(amap.local_addr(addrs))
+    rows = timings.row_of(amap.local_addr(addrs))
+    rw_arr = None if rw is None else np.asarray(rw, np.int32).ravel()
+
+    open_row: list[dict[int, int]] = [dict() for _ in range(c)]
+    last_dir = [-1] * c
+    n_first = [0] * c
+    n_hit = [0] * c
+    n_conflict = [0] * c
+    n_req = [0] * c
+    turn = [0] * c
+    for i in range(addrs.shape[0]):
+        k, b, r = int(ch[i]), int(banks[i]), int(rows[i])
+        n_req[k] += 1
+        state = open_row[k]
+        if b not in state:
+            n_first[k] += 1
+        elif state[b] == r:
+            n_hit[k] += 1
+        else:
+            n_conflict[k] += 1
+        state[b] = r
+        if rw_arr is not None:
+            d = int(rw_arr[i])
+            if last_dir[k] == 1 and d == 0:
+                turn[k] += timings.t_wtr
+            elif last_dir[k] == 0 and d == 1:
+                turn[k] += timings.t_rtw
+            last_dir[k] = d
+    per_channel = []
+    for k in range(c):
+        dram_cycles = (
+            n_first[k] * (timings.t_rcd + timings.t_cl)
+            + n_hit[k] * timings.t_cl
+            + n_conflict[k] * (timings.t_rp + timings.t_rcd + timings.t_cl)
+            + n_req[k] * timings.t_burst + turn[k])
+        per_channel.append(SimResult(
+            total_fpga_cycles=dram_cycles * timings.clock_ratio,
+            row_hits=n_hit[k], row_conflicts=n_conflict[k],
+            first_accesses=n_first[k]))
+    return _aggregate(per_channel, n_req, 0.0)
+
+
+def simulate_channels(
+    addrs: np.ndarray,
+    timings: DRAMTimings = DDR4_2400,
+    channel_cfg: ChannelConfig = ChannelConfig(),
+    rw: np.ndarray | None = None,
+) -> ChannelSimResult:
+    """Channel-parallel open-row simulation — bit-identical to
+    :func:`simulate_channels_seq`.
+
+    Channels are exactly independent after mapping (a request touches
+    only its channel's bank state; turnarounds depend only on its
+    channel's rw substream), so the trace is partitioned by channel —
+    arrival order preserved within each channel by a stable selection —
+    and every channel runs the vectorized
+    :func:`~repro.core.timing.simulate_dram_access` on its *local*
+    addresses.
+    """
+    amap = AddressMap(channel_cfg, timings)
+    addrs = np.asarray(addrs, dtype=np.int64).ravel()
+    c = channel_cfg.num_channels
+    local = amap.local_addr(addrs)
+    ch = amap.channel_of(addrs)
+    rw_arr = None if rw is None else np.asarray(rw, np.int32).ravel()
+    per_channel, counts = [], []
+    for k in range(c):
+        sel = np.flatnonzero(ch == k)       # stable: keeps arrival order
+        per_channel.append(simulate_dram_access(
+            local[sel], timings,
+            rw=None if rw_arr is None else rw_arr[sel]))
+        counts.append(int(sel.shape[0]))
+    return _aggregate(per_channel, counts, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Front-end pipelines: mapping (+ arbitration) (+ scheduling) → channels
+# ---------------------------------------------------------------------------
+
+def _run_channel(local_ch, rw_ch, *, sched_config, timings,
+                 coalesce_writes, use_seq_oracle):
+    """One channel's back half — optional scheduler front end, then the
+    open-row simulation — with ``use_seq_oracle`` swapping every stage
+    for its request-at-a-time sibling. Shared by both pipelines so the
+    fast path and the oracle composition can never drift apart."""
+    from repro.core import scheduler as sched
+
+    if sched_config is not None:
+        schedule = (sched.schedule_trace_rw_seq if use_seq_oracle
+                    else sched.schedule_trace_rw)
+        served, served_rw = schedule(local_ch, rw_ch, config=sched_config,
+                                     timings=timings,
+                                     coalesce_writes=coalesce_writes)
+    else:
+        served, served_rw = local_ch, rw_ch
+    if use_seq_oracle:
+        return simulate_channels_seq(served, timings, ChannelConfig(),
+                                     rw=served_rw).per_channel[0]
+    return simulate_dram_access(served, timings, rw=served_rw)
+
+
+def schedule_and_simulate_channels(
+    addrs: np.ndarray,
+    rw: np.ndarray | None = None,
+    *,
+    sched_config: SchedulerConfig,
+    timings: DRAMTimings = DDR4_2400,
+    channel_cfg: ChannelConfig = ChannelConfig(),
+    coalesce_writes: bool = False,
+    use_seq_oracle: bool = False,
+) -> ChannelSimResult:
+    """Single-port multi-channel pipeline: map → per-channel scheduler
+    (each channel owns a batch former + bitonic sorter, exactly like
+    each channel owns a DRAM interface) → per-channel open-row
+    simulation → makespan aggregate.
+
+    ``use_seq_oracle`` routes every stage through its request-at-a-time
+    sibling (``schedule_trace_rw_seq`` + per-request classification) —
+    the composition the fast path is property-tested against.
+    """
+    amap = AddressMap(channel_cfg, timings)
+    addrs = np.asarray(addrs, dtype=np.int64).ravel()
+    rw_arr = np.zeros(addrs.shape[0], np.int32) if rw is None \
+        else np.asarray(rw, np.int32).ravel()
+    ch = amap.channel_of(addrs)
+    local = amap.local_addr(addrs)
+    per_channel, counts = [], []
+    for k in range(channel_cfg.num_channels):
+        sel = np.flatnonzero(ch == k)
+        per_channel.append(_run_channel(
+            local[sel], rw_arr[sel], sched_config=sched_config,
+            timings=timings, coalesce_writes=coalesce_writes,
+            use_seq_oracle=use_seq_oracle))
+        counts.append(int(sel.shape[0]))
+    return _aggregate(per_channel, counts, 0.0)
+
+
+def simulate_multiport_channels(
+    pe_id: np.ndarray,
+    addrs: np.ndarray,
+    rw: np.ndarray | None = None,
+    *,
+    num_ports: int,
+    policy: str = "round_robin",
+    weights: Sequence[int] | None = None,
+    timings: DRAMTimings = DDR4_2400,
+    channel_cfg: ChannelConfig = ChannelConfig(),
+    sched_config: SchedulerConfig | None = None,
+    coalesce_writes: bool = False,
+    use_seq_oracle: bool = False,
+) -> ChannelSimResult:
+    """Full front end: per-PE streams → per-channel arbiter → optional
+    per-channel scheduler → channel-parallel DRAM simulation.
+
+    Each channel owns an arbiter instance that merges the port
+    substreams destined for it (per-port FIFOs ⇒ per-port arrival order
+    is preserved into every channel queue). The makespan charges the
+    slowest channel plus the arbiter fill
+    (:func:`arbiter_fill_cycles`). Port statistics aggregate over all
+    channel arbiters: grants and stall slots sum, and ``fairness`` is
+    the Jain index of the aggregated per-port grant counts.
+
+    ``use_seq_oracle`` swaps every stage for its sequential sibling
+    (``arbitrate_ports_seq`` / ``schedule_trace_rw_seq`` / per-request
+    channel walk) — the bit-identity oracle for the property tests.
+    """
+    amap = AddressMap(channel_cfg, timings)
+    addrs = np.asarray(addrs, dtype=np.int64).ravel()
+    pe = np.asarray(pe_id, dtype=np.int64).ravel()
+    if pe.shape != addrs.shape:
+        raise ValueError("pe_id must have one entry per request")
+    rw_arr = np.zeros(addrs.shape[0], np.int32) if rw is None \
+        else np.asarray(rw, np.int32).ravel()
+    ch = amap.channel_of(addrs)
+    local = amap.local_addr(addrs)
+    arbitrate = arbitrate_ports_seq if use_seq_oracle else arbitrate_ports
+
+    per_channel, counts = [], []
+    grants = np.zeros(num_ports, dtype=np.int64)
+    stalls = np.zeros(num_ports, dtype=np.int64)
+    for k in range(channel_cfg.num_channels):
+        sel = np.flatnonzero(ch == k)
+        perm, stats = arbitrate(pe[sel], num_ports=num_ports,
+                                policy=policy, weights=weights)
+        order = sel[perm]
+        grants += stats.grants
+        stalls += stats.stall_slots
+        per_channel.append(_run_channel(
+            local[order], rw_arr[order], sched_config=sched_config,
+            timings=timings, coalesce_writes=coalesce_writes,
+            use_seq_oracle=use_seq_oracle))
+        counts.append(int(sel.shape[0]))
+    port_stats = ArbiterStats(grants=grants, stall_slots=stalls,
+                              fairness=_jain(grants))
+    return _aggregate(per_channel, counts,
+                      float(arbiter_fill_cycles(num_ports)),
+                      port_stats=port_stats)

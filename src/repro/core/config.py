@@ -101,6 +101,46 @@ class CacheConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Memory-channel / address-mapping parameters (Table-I-style front end).
+
+    The paper's controller is synthesized against one memory interface;
+    HBM-class parts expose several independent channels behind the same
+    address space. These knobs pick how the flat physical address is
+    decomposed into (channel, bank, row) — the choice that the Memory
+    Controller Wall study (arXiv:1910.06726) shows dominates sustained
+    bandwidth on FPGA memory interfaces. [PL+TUNE]
+    """
+
+    #: independent DRAM channels simulated in parallel (1 = the paper's
+    #: single-interface design; 8 covers HBM2 stack halves).
+    num_channels: int = 1
+    #: block-interleave granularity in bytes — consecutive blocks of this
+    #: size round-robin across channels (ignored by "row_interleave",
+    #: which interleaves at DRAM-row granularity).
+    interleave_bytes: int = 256
+    #: channel-select policy:
+    #:   "row_interleave"   — consecutive DRAM rows rotate channels,
+    #:   "block_interleave" — consecutive interleave_bytes blocks rotate,
+    #:   "xor"              — block index XOR-folded with higher address
+    #:                        bits (breaks power-of-two stride camping).
+    policy: str = "row_interleave"
+
+    _POLICIES = ("row_interleave", "block_interleave", "xor")
+
+    def __post_init__(self) -> None:
+        _check_range("channels.num_channels", self.num_channels, 1, 16)
+        _check_pow2("channels.num_channels", self.num_channels)
+        _check_range("channels.interleave_bytes", self.interleave_bytes,
+                     64, 1 << 20)
+        _check_pow2("channels.interleave_bytes", self.interleave_bytes)
+        if self.policy not in self._POLICIES:
+            raise ValueError(
+                f"channels.policy={self.policy!r} must be one of "
+                f"{self._POLICIES}")
+
+
+@dataclasses.dataclass(frozen=True)
 class DMAConfig:
     """DMA engine parameters (Table I, 'Direct Memory Access')."""
 
@@ -137,6 +177,7 @@ class MemoryControllerConfig:
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
     dma: DMAConfig = dataclasses.field(default_factory=DMAConfig)
+    channels: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
     # FLIT generation + path-selection latency budget (paper: <= 10 cycles).
     ctrl_overhead_cycles: int = 10
 
@@ -170,9 +211,12 @@ class MemoryControllerConfig:
             # double-buffered staging per channel
             total += 2 * self.dma.num_parallel_dma * self.dma.buffer_bytes
         if self.scheduler.enabled:
-            # key/value pairs being sorted, double-buffered input queues
+            # key/value pairs being sorted, double-buffered input queues —
+            # replicated per memory channel (each channel owns a scheduler
+            # front end; one channel is the paper's single-interface case).
             n = self.scheduler.batch_size
-            total += 2 * n * 8 + 2 * n * self.app_io_data_width_bytes
+            total += self.channels.num_channels * (
+                2 * n * 8 + 2 * n * self.app_io_data_width_bytes)
         return total
 
     def describe(self) -> str:
@@ -191,6 +235,9 @@ class MemoryControllerConfig:
             f"  dma: enabled={self.dma.enabled} "
             f"channels={self.dma.num_parallel_dma} "
             f"txn<={self.dma.max_transaction_bytes}B",
+            f"  mem channels: {self.channels.num_channels} "
+            f"({self.channels.policy}, "
+            f"interleave={self.channels.interleave_bytes}B)",
             f"  vmem footprint ~ {self.vmem_footprint_bytes() / 1024:.1f} KiB",
         ]
         return "\n".join(lines)

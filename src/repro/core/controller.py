@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import channels as channels_mod
 from repro.core import dma_engine, scatter_util, scheduler
 from repro.core.config import MemoryControllerConfig
 from repro.core.timing import (DRAMTimings, DDR4_2400, SimResult,
@@ -256,10 +257,51 @@ class MemoryController:
         stream is costed with open-row state *and* bus-turnaround
         penalties (the Fig. 7 methodology extended to writes).
         ``coalesce_writes`` also models per-batch VMEM write coalescing
-        (what the sorted_scatter data plane does; fig7w uses it)."""
+        (what the sorted_scatter data plane does; fig7w uses it).
+
+        The trace is first decomposed by the configured
+        :class:`~repro.core.channels.AddressMap`; each channel schedules
+        and services its share independently, and the returned
+        ``total_fpga_cycles`` is the multi-channel *makespan* (slowest
+        channel). At ``num_channels=1`` the map is the identity and this
+        is exactly the paper's single-interface pipeline (bit-identical:
+        ``test_single_channel_matches_plain_simulator``). See
+        :meth:`modeled_channel_access_time` for the full per-channel
+        breakdown."""
+        return self.modeled_channel_access_time(
+            row_ids, rw, row_bytes,
+            coalesce_writes=coalesce_writes).as_sim_result()
+
+    def modeled_channel_access_time(
+        self, row_ids: np.ndarray, rw: np.ndarray, row_bytes: int,
+        *, coalesce_writes: bool = False,
+    ) -> channels_mod.ChannelSimResult:
+        """Multi-channel view of :meth:`modeled_access_time`: the
+        configured AddressMap splits the trace, each channel runs its
+        own scheduler front end + open-row simulation, and the result
+        carries makespan, per-channel occupancy and hit counts."""
         addrs = np.asarray(row_ids, dtype=np.int64) * row_bytes
-        served, served_rw = scheduler.schedule_trace_rw(
+        return channels_mod.schedule_and_simulate_channels(
             addrs, np.asarray(rw, dtype=np.int32),
-            config=self.config.scheduler, timings=self.timings,
+            sched_config=self.config.scheduler, timings=self.timings,
+            channel_cfg=self.config.channels,
             coalesce_writes=coalesce_writes)
-        return simulate_dram_access(served, self.timings, rw=served_rw)
+
+    def modeled_multiport_access_time(
+        self, pe_id: np.ndarray, row_ids: np.ndarray, rw: np.ndarray,
+        row_bytes: int, *, policy: str = "round_robin",
+        weights=None, coalesce_writes: bool = False,
+    ) -> channels_mod.ChannelSimResult:
+        """Modeled completion time when ``config.num_pes`` ports contend
+        for the channels: per-PE streams are merged by the per-channel
+        arbiters (round_robin / priority / weighted), scheduled, and
+        serviced channel-parallel. The result's ``port_stats`` report
+        per-port grants, stall slots and Jain fairness."""
+        addrs = np.asarray(row_ids, dtype=np.int64) * row_bytes
+        return channels_mod.simulate_multiport_channels(
+            pe_id, addrs, np.asarray(rw, dtype=np.int32),
+            num_ports=self.config.num_pes, policy=policy, weights=weights,
+            timings=self.timings, channel_cfg=self.config.channels,
+            sched_config=(self.config.scheduler
+                          if self.config.scheduler.enabled else None),
+            coalesce_writes=coalesce_writes)

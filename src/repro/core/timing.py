@@ -73,10 +73,16 @@ DDR4_2400 = DRAMTimings()
 
 # TPU v5e HBM modeled with the same open-row abstraction: much wider rows and
 # higher relative conflict penalty against the 940 MHz core clock.
+# Bus-turnaround overrides: the DDR4 defaults (t_wtr=8, t_rtw=4) are wrong
+# for HBM — its single-cycle burst occupancy (t_burst=1 vs 4) and wide
+# per-pseudo-channel bus leave far less data-bus tail to drain before the
+# direction can flip, so the turnaround gaps are proportionally smaller
+# in command clocks.
 HBM_V5E = DRAMTimings(
     t_cl=14, t_rcd=14, t_rp=14,
     t_mem_ns=0.55, t_fpga_ns=1.064,
     num_banks=32, row_bytes=16384, burst_bytes=512, t_burst=1,
+    t_wtr=4, t_rtw=2,
 )
 
 
@@ -127,12 +133,20 @@ def t_dma_transfer(
     seq_mask: np.ndarray,
     timings: DRAMTimings = DDR4_2400,
     l_data_convert: int = 2,
+    channel_ids: np.ndarray | None = None,
 ) -> float:
     """Eq. 3 — total DMA time for a bulk transfer of N elements.
 
     ``seq_mask[i]`` is True when element i is a sequential DRAM access
     (row-buffer hit) and False when random (row conflict); the paper requires
     exactly one of the two per element.
+
+    ``channel_ids`` (one memory-channel index per element, from
+    ``channels.AddressMap.channel_of``) extends Eq. 3 to a multi-channel
+    interface: each channel streams its share of the elements
+    concurrently, so the element term is the *slowest channel's* sum
+    (makespan) rather than the single-interface total. ``None`` keeps
+    the paper's single-channel equation exactly.
     """
     seq_mask = np.asarray(seq_mask, dtype=bool)
     if seq_mask.shape != (num_elems,):
@@ -140,9 +154,19 @@ def t_dma_transfer(
     t_sch = t_schedule(cfg.scheduler.batch_size,
                        cfg.scheduler.data_cond_cycles) if \
         cfg.scheduler.enabled else 0.0
-    t_elems = (seq_mask.sum() * timings.t_mem_seq()
-               + (~seq_mask).sum() * timings.t_mem_rand())
-    # Parallel channels overlap element streaming (paper Fig. 5 discussion).
+    if channel_ids is None:
+        t_elems = (seq_mask.sum() * timings.t_mem_seq()
+                   + (~seq_mask).sum() * timings.t_mem_rand())
+    else:
+        ch = np.asarray(channel_ids, dtype=np.int64)
+        if ch.shape != (num_elems,):
+            raise ValueError("channel_ids must have one entry per element")
+        per_elem = np.where(seq_mask, timings.t_mem_seq(),
+                            timings.t_mem_rand())
+        sums = np.bincount(ch, weights=per_elem)
+        t_elems = float(sums.max()) if sums.size else 0.0
+    # Parallel DMA buffers overlap element streaming within a channel
+    # (paper Fig. 5 discussion); memory channels overlap across channels.
     t_elems /= max(1, cfg.dma.num_parallel_dma)
     return cfg.ctrl_overhead_cycles + t_sch + l_data_convert + t_elems
 

@@ -89,6 +89,44 @@ def test_typed_batches_preserve_same_type_order():
     assert (np.diff(wbatch.seq) > 0).all()
 
 
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 12),
+                          st.integers(0, 1)),
+                min_size=0, max_size=250),
+       st.sampled_from([4, 16, 64]))
+def test_property_per_pe_order_survives_batching_and_sorting(reqs,
+                                                             batch_size):
+    """The invariant the multi-port arbiter depends on: each PE's stream
+    enters the controller in arrival order, and neither batching nor the
+    row sort may break it. Precisely: (a) within a request type, the
+    dual-queue former emits every PE's requests in arrival order across
+    the concatenated batch sequence (stable FIFO queues); (b) after the
+    bitonic row sort, same-(pe, addr) same-type requests still keep
+    arrival order (stable sort) — the per-port weak-consistency rule."""
+    pe = np.array([r[0] for r in reqs], np.int32)
+    addrs = np.array([r[1] * 8192 for r in reqs], np.int64)
+    rw = np.array([r[2] for r in reqs], np.int32)
+    cfg = SchedulerConfig(batch_size=batch_size, bypass_sequential=False)
+    batches = list(form_batches_typed(addrs, rw, pe_id=pe, config=cfg))
+    for t in (READ, WRITE):
+        formed = [b for b in batches if b.rw == t]
+        # (a) batch formation: per-PE arrival order across batches
+        if formed:
+            pe_cat = np.concatenate([b.pe_id for b in formed])
+            seq_cat = np.concatenate([b.seq for b in formed])
+            for p in np.unique(pe_cat):
+                assert (np.diff(seq_cat[pe_cat == p]) > 0).all()
+        # (b) row sort: per-(PE, addr) arrival order inside each batch
+        sorted_batches = [reorder_batch(b, DDR4_2400) for b in formed]
+        if sorted_batches:
+            pe_s = np.concatenate([b.pe_id for b in sorted_batches])
+            ad_s = np.concatenate([b.addr for b in sorted_batches])
+            sq_s = np.concatenate([b.seq for b in sorted_batches])
+            for key in set(zip(pe_s.tolist(), ad_s.tolist())):
+                m = (pe_s == key[0]) & (ad_s == key[1])
+                assert (np.diff(sq_s[m]) > 0).all()
+
+
 def test_typed_batches_close_on_timeout():
     cfg = SchedulerConfig(batch_size=64, timeout_cycles=10)
     arrival = [0, 1, 2, 50, 51, 52]

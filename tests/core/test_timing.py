@@ -3,10 +3,11 @@
 import numpy as np
 import pytest
 
-from repro.core.config import (MemoryControllerConfig, SchedulerConfig,
-                               scheduler_sort_stages)
-from repro.core.timing import (DDR4_2400, DRAMTimings, simulate_dram_access,
-                               t_cache_trace, t_dma_transfer, t_schedule,
+from repro.core.config import (ChannelConfig, MemoryControllerConfig,
+                               SchedulerConfig, scheduler_sort_stages)
+from repro.core.timing import (DDR4_2400, DRAMTimings, HBM_V5E,
+                               simulate_dram_access, t_cache_trace,
+                               t_dma_transfer, t_schedule,
                                turnaround_cycles)
 
 
@@ -72,6 +73,42 @@ def test_rw_none_matches_legacy_costing():
     legacy = simulate_dram_access(addrs)
     all_reads = simulate_dram_access(addrs, rw=np.zeros(512, np.int32))
     assert legacy.total_fpga_cycles == all_reads.total_fpga_cycles
+
+
+def test_hbm_preset_overrides_ddr4_turnaround():
+    """Regression: HBM_V5E used to inherit DDR4's bus-turnaround defaults
+    (t_wtr=8 / t_rtw=4, DDR4 command clocks). The preset must carry its
+    own HBM-appropriate values — single-cycle burst occupancy leaves far
+    less bus tail to drain — and the two presets must actually differ."""
+    assert (HBM_V5E.t_wtr, HBM_V5E.t_rtw) != (DDR4_2400.t_wtr,
+                                              DDR4_2400.t_rtw)
+    assert HBM_V5E.t_wtr < DDR4_2400.t_wtr
+    assert HBM_V5E.t_rtw < DDR4_2400.t_rtw
+    # turnarounds scale with burst occupancy: HBM streams a burst in 1
+    # command clock vs DDR4's 4, so its direction-change gaps are smaller
+    assert HBM_V5E.t_burst < DDR4_2400.t_burst
+    rw = np.array([0, 1] * 32)
+    assert turnaround_cycles(rw, HBM_V5E) < turnaround_cycles(rw, DDR4_2400)
+
+
+def test_eq3_channel_overlap_is_slowest_channel():
+    """Per-channel Eq. 3: with elements spread over channels the element
+    term collapses to the slowest channel's share; camping every element
+    on one channel recovers the single-interface equation exactly."""
+    cfg = MemoryControllerConfig(channels=ChannelConfig(num_channels=4))
+    n = 256
+    mask = np.zeros(n, bool)
+    single = t_dma_transfer(cfg, n, mask)
+    balanced = t_dma_transfer(cfg, n, mask,
+                              channel_ids=np.arange(n) % 4)
+    camped = t_dma_transfer(cfg, n, mask,
+                            channel_ids=np.zeros(n, np.int64))
+    assert camped == single
+    assert balanced < single
+    np.testing.assert_allclose(single - balanced,
+                               (single - t_dma_transfer(cfg, 0,
+                                                        np.zeros(0, bool)))
+                               * 0.75, rtol=1e-9)
 
 
 def test_eq2_cache_trace_hits_cheaper():
