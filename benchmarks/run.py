@@ -11,20 +11,25 @@ probe reproduces one published artifact:
   fig8    — interface-width sweep, 20x DMA advantage    (Fig. 8)
   fig9    — schedule-time breakdown, 32-64 optimum      (Fig. 9)
   autotune— TUNE-parameter search convergence           (§II, Table I)
+  pipeline— combined cache+scheduler+channels config    (Fig. 7 composed)
 
-The paper-claim probes (fig7 / fig7w) also persist machine-readable
-``BENCH_fig7.json`` / ``BENCH_fig7_write.json`` summaries so the repo's
-perf trajectory accumulates per PR; ``benchmarks/perf_trace_engine.py``
-(run separately — it is minutes-long at full size) writes
-``BENCH_trace_engine.json`` for the simulator's own throughput, and
-``benchmarks/perf_channels.py`` (also separate) writes
-``BENCH_channels.json`` for the multi-channel/multi-port front end.
+The paper-claim probes (fig7 / fig7w / pipeline) also persist
+machine-readable ``BENCH_fig7.json`` / ``BENCH_fig7_write.json`` /
+``BENCH_pipeline.json`` summaries so the repo's perf trajectory
+accumulates per PR (the pipeline probe runs at full size so the
+tracked artifact stays stable; CI smoke uses ``--small``);
+``benchmarks/perf_trace_engine.py`` (run separately — it is
+minutes-long at full size) writes ``BENCH_trace_engine.json`` for the
+simulator's own throughput, and ``benchmarks/perf_channels.py`` (also
+separate) writes ``BENCH_channels.json`` for the multi-channel /
+multi-port front end.
 """
 
 from benchmarks import (autotune_bench, fig5_dma_resources,
                         fig6_scheduler_cost, fig7_workloads,
                         fig7_write_workloads, fig8_interface_width,
-                        fig9_schedule_time, table3_cache_resources)
+                        fig9_schedule_time, perf_pipeline,
+                        table3_cache_resources)
 from benchmarks.common import write_bench_json
 
 
@@ -38,6 +43,9 @@ def main() -> None:
     fig8_interface_width.run()
     fig9_schedule_time.run()
     autotune_bench.run()
+    # Full size, so the tracked BENCH_pipeline.json acceptance artifact
+    # is never overwritten with CI-size numbers (CI runs --small).
+    perf_pipeline.run()            # writes BENCH_pipeline.json itself
 
 
 if __name__ == "__main__":

@@ -15,7 +15,8 @@ import numpy as np
 
 from repro.core import (MemoryController, MemoryControllerConfig,
                         simulate_dram_access)
-from repro.core.config import CacheConfig, DMAConfig, SchedulerConfig
+from repro.core.config import (CacheConfig, ChannelConfig, DMAConfig,
+                               SchedulerConfig)
 from repro.launch.train import Trainer, TrainerConfig
 
 
@@ -25,6 +26,7 @@ def demo_controller():
         scheduler=SchedulerConfig(batch_size=64, timeout_cycles=16),
         cache=CacheConfig(num_lines=4096, associativity=4),
         dma=DMAConfig(num_parallel_dma=4),
+        channels=ChannelConfig(num_channels=4),
     )
     print(cfg.describe())
 
@@ -34,12 +36,17 @@ def demo_controller():
     idx = jnp.asarray(np.random.default_rng(1).integers(0, 4096, 1024))
     out = mc.gather(table, idx)                 # scheduler-path gather
     assert jnp.allclose(out, table[idx])
+
+    # Full staged pipeline: arbiters -> address map -> cache filter ->
+    # batch scheduler -> channel-parallel DRAM service -> DMA overlap.
     base = simulate_dram_access(np.asarray(idx) * 256)
-    opt = mc.modeled_gather_time(np.asarray(idx), row_bytes=256)
+    res = mc.simulate(None, np.asarray(idx), None, 256)
     print(f"modeled DRAM cycles: {base.total_fpga_cycles:.0f} -> "
-          f"{opt.total_fpga_cycles:.0f} "
-          f"({1 - opt.total_fpga_cycles / base.total_fpga_cycles:.0%} saved"
-          f", row-hit rate {base.hit_rate:.2f} -> {opt.hit_rate:.2f})\n")
+          f"{res.makespan_fpga_cycles:.0f} "
+          f"({1 - res.makespan_fpga_cycles / base.total_fpga_cycles:.0%} "
+          f"saved, cache hit rate {res.cache_hit_rate:.2f})")
+    print("per-stage cycle breakdown:",
+          {k: round(v) for k, v in res.breakdown().items()}, "\n")
 
 
 def demo_train():

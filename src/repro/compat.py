@@ -1,0 +1,29 @@
+"""Version-compatibility shims for the pinned container toolchain.
+
+The repo targets the current jax API; the container pins an older
+release where some entry points live elsewhere or take different
+keyword names. Shims here keep call sites written against the new API
+(the same role ``tests/_hypothesis_fallback.py`` plays for hypothesis).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec
+
+P = getattr(jax, "P", PartitionSpec)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None):
+    """``jax.shard_map`` across versions: the new top-level API takes
+    ``check_vma``; the 0.4.x experimental version spells it
+    ``check_rep`` (same meaning: static replication checking)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

@@ -17,11 +17,11 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.cache_engine import hit_rate_oracle
-from repro.core.channels import schedule_and_simulate_channels
 from repro.core.config import (CacheConfig, ChannelConfig, DMAConfig,
                                MemoryControllerConfig, SchedulerConfig)
-from repro.core.timing import DRAMTimings, DDR4_2400, t_schedule
+from repro.core.pipeline import (PipelineContext, RequestStream,
+                                 default_stages, run_pipeline)
+from repro.core.timing import DRAMTimings, DDR4_2400
 
 
 @dataclasses.dataclass
@@ -37,40 +37,25 @@ def _score(
     row_ids: np.ndarray,
     row_bytes: int,
     timings: DRAMTimings,
-    hits: np.ndarray | None = None,
+    memo: dict | None = None,
 ) -> float:
-    """Modeled total access cycles for an irregular trace under ``cfg``.
+    """Modeled total access cycles for an irregular trace under ``cfg`` —
+    the full staged pipeline's ``makespan_fpga_cycles``.
 
-    Cache hits are served on-chip (1 cycle); misses flow through the
-    scheduler to DRAM. Batch scheduling adds Eq. 1 latency per batch but
-    only the *first* batch is exposed (subsequent batch formation overlaps
-    DRAM service — paper Fig. 9 discussion). Misses are decomposed by the
-    configured AddressMap and serviced channel-parallel: the DRAM term is
-    the multi-channel *makespan* (slowest channel).
+    Cache hits are served on-chip and *removed* from the DRAM stream
+    (CacheFilter); misses flow through the per-channel schedulers to the
+    channel-parallel DRAM service, so the DRAM term is the multi-channel
+    makespan; only the non-overlapped scheduling residual is exposed
+    (DMAOverlap). Scoring the composed pipeline is what lets ``tune``
+    search cache geometry × num_channels × mapping policy *jointly*
+    instead of by independent oracles. ``memo`` is the CacheFilter's
+    shared cache, keyed by cache×channel shape (one expensive trace scan
+    per shape across the whole grid).
     """
-    addrs = row_ids.astype(np.int64) * row_bytes
-    if hits is None:        # precomputable per cache shape — see tune()
-        if cfg.cache.enabled:
-            hits, _ = hit_rate_oracle(cfg.cache,
-                                      addrs // cfg.cache.line_bytes)
-        else:
-            hits = np.zeros(addrs.shape[0], dtype=bool)
-    miss_addrs = addrs[~hits]
-
-    dram = schedule_and_simulate_channels(
-        miss_addrs, sched_config=cfg.scheduler, timings=timings,
-        channel_cfg=cfg.channels)
-
-    n_batches = max(1, -(-miss_addrs.shape[0] // cfg.scheduler.batch_size))
-    first_batch = t_schedule(cfg.scheduler.batch_size) if \
-        cfg.scheduler.enabled else 0.0
-    # Residual (non-overlapped) scheduling cost per subsequent batch: the
-    # sort stages not hidden behind DRAM service of the previous batch.
-    resid = 0.0 if not cfg.scheduler.enabled else max(
-        0.0, t_schedule(cfg.scheduler.batch_size)
-        - dram.total_fpga_cycles / n_batches) * (n_batches - 1)
-    return (cfg.ctrl_overhead_cycles + first_batch + resid
-            + hits.sum() * 1.0 + dram.total_fpga_cycles)
+    stream = RequestStream.from_rows(row_ids, row_bytes=row_bytes)
+    ctx = PipelineContext.from_config(cfg, timings)
+    stages = default_stages(ctx, cache=True, cache_memo=memo)
+    return run_pipeline(stream, ctx, stages).makespan_fpga_cycles
 
 
 def tune(
@@ -103,21 +88,11 @@ def tune(
     chan_grid = [(nc, pol) for nc in num_channels
                  for pol in (mapping_policies if nc > 1
                              else mapping_policies[:1])]
-    # The LRU hit mask — the expensive full-trace scan — depends only on
-    # the cache shape, not on batch/dma/channel axes: compute it once per
-    # (ways, lines) instead of once per grid point.
-    hits_by_shape: dict[tuple[int, int], np.ndarray] = {}
-
-    def _hits(cache_cfg: CacheConfig) -> np.ndarray:
-        key = (cache_cfg.associativity, cache_cfg.num_lines)
-        if key not in hits_by_shape:
-            if cache_cfg.enabled:
-                addrs = row_ids.astype(np.int64) * row_bytes
-                hits_by_shape[key] = hit_rate_oracle(
-                    cache_cfg, addrs // cache_cfg.line_bytes)[0]
-            else:
-                hits_by_shape[key] = np.zeros(row_ids.shape[0], bool)
-        return hits_by_shape[key]
+    # The cache-filtered stream — the expensive full-trace scan — depends
+    # only on the cache shape and the channel mapping, not on batch/dma
+    # axes: the CacheFilter stage memoizes it per (cache, channels) shape
+    # across the whole grid via this shared dict.
+    filter_memo: dict = {}
 
     for batch in batch_sizes:
         for ways, lines in cache_grid:
@@ -138,7 +113,7 @@ def tune(
                         continue
                     n_eval += 1
                     cycles = _score(cfg, row_ids, row_bytes, timings,
-                                    hits=_hits(cfg.cache))
+                                    memo=filter_memo)
                     table.append((
                         f"batch={batch} ways={ways} lines={lines} "
                         f"dma={ch} mem_ch={nc} map={policy}",

@@ -323,6 +323,170 @@ def flush(state: CacheState, table: jnp.ndarray
         state, dirty=jnp.zeros_like(state.dirty)), new_table
 
 
+@dataclasses.dataclass
+class FilterResult:
+    """Outcome of running a line-id trace through the cache *filter* —
+    the pipeline-stage view of the cache engine (no data movement).
+
+    ``hits[i]`` — request i hit in the cache. ``keep[i]`` — request i is
+    forwarded to the DRAM stream (misses always; write hits only under
+    write-through). ``wb_pos``/``wb_line`` — victim write-backs emitted
+    by evictions of dirty lines: a WRITE of line ``wb_line[j]`` enters
+    the DRAM stream immediately *before* the evicting miss at trace
+    position ``wb_pos[j]`` (write-back policy only; at most one per
+    miss). Residual dirty lines at end of trace are *not* flushed — the
+    filter models steady-state occupancy, not teardown.
+    """
+
+    hits: np.ndarray      # (N,) bool
+    keep: np.ndarray      # (N,) bool
+    wb_pos: np.ndarray    # (W,) int64, ascending
+    wb_line: np.ndarray   # (W,) int64
+
+    @property
+    def hit_rate(self) -> float:
+        return float(self.hits.mean()) if self.hits.size else 0.0
+
+    @property
+    def n_writebacks(self) -> int:
+        return int(self.wb_pos.shape[0])
+
+
+def _empty_filter_result(n: int) -> FilterResult:
+    return FilterResult(hits=np.zeros(n, bool), keep=np.ones(n, bool),
+                        wb_pos=np.empty(0, np.int64),
+                        wb_line=np.empty(0, np.int64))
+
+
+def filter_trace_rw_seq(
+    config: CacheConfig, line_ids: np.ndarray, rw: np.ndarray | None = None,
+) -> FilterResult:
+    """Reference implementation of :func:`filter_trace_rw` — one python
+    dict per set, one iteration per request (the :func:`hit_rate_oracle_seq`
+    walk extended with dirty bits and victim write-backs). Kept as the
+    oracle the lockstep version is property-tested against."""
+    sets, ways = config.num_sets, config.associativity
+    wb = config.write_policy == "write_back"
+    lids = np.asarray(line_ids, dtype=np.int64).ravel()
+    rw_arr = np.zeros(lids.shape[0], np.int32) if rw is None \
+        else np.asarray(rw, dtype=np.int32).ravel()
+    res = _empty_filter_result(lids.shape[0])
+    wb_pos: list[int] = []
+    wb_line: list[int] = []
+    entries: list[dict[int, list]] = [dict() for _ in range(sets)]
+    for i, lid in enumerate(lids):
+        s, t = int(lid % sets), int(lid // sets)
+        e = entries[s]
+        w = int(rw_arr[i]) == 1
+        if t in e:
+            res.hits[i] = True
+            rec = e[t]
+            rec[0] = i
+            if w:
+                rec[1] = wb           # write hit: dirty under write-back,
+                res.keep[i] = not wb  # forwarded under write-through
+            else:
+                res.keep[i] = False   # read hit served from Data RAM
+        else:
+            if len(e) >= ways:
+                vt = min(e, key=lambda k: e[k][0])
+                if e[vt][1]:
+                    wb_pos.append(i)
+                    wb_line.append(vt * sets + s)
+                del e[vt]
+            e[t] = [i, w and wb]      # write-allocate; full-line FLIT
+    res.wb_pos = np.asarray(wb_pos, np.int64)
+    res.wb_line = np.asarray(wb_line, np.int64)
+    return res
+
+
+def filter_trace_rw(
+    config: CacheConfig, line_ids: np.ndarray, rw: np.ndarray | None = None,
+    *, engine: str = "auto",
+) -> FilterResult:
+    """Cache filter for the staged pipeline: classify a mixed read/write
+    line trace, *remove* requests the cache absorbs, and emit the victim
+    write-backs the write-back policy adds to the DRAM stream.
+
+    Semantics (identical to :func:`filter_trace_rw_seq`, property-tested):
+    read hits are served on-chip and dropped from the stream; write hits
+    are absorbed (dirty) under ``write_back`` and forwarded under
+    ``write_through``; misses always go downstream (write-allocate — a
+    full-line write needs no fill read); evicting a dirty way inserts a
+    WRITE of the victim line just before the evicting miss.
+
+    Vectorized exactly like :func:`hit_rate_oracle` — all sets advance in
+    lockstep over padded per-set subtraces with ``(sets, ways)``
+    tag/age/dirty arrays; global arrival indices keep LRU victims
+    identical to the dict walk. Skewed or tiny traces dispatch to the
+    sequential oracle (same skew heuristic as the hit-rate oracle).
+    """
+    if engine not in ("auto", "parallel", "sequential"):
+        raise ValueError(f"unknown engine {engine!r}")
+    sets, ways = config.num_sets, config.associativity
+    wb = config.write_policy == "write_back"
+    lids = np.asarray(line_ids, dtype=np.int64).ravel()
+    n = lids.shape[0]
+    if n == 0:
+        return _empty_filter_result(0)
+    rw_arr = np.zeros(n, np.int32) if rw is None \
+        else np.asarray(rw, dtype=np.int32).ravel()
+    if engine == "sequential":
+        return filter_trace_rw_seq(config, lids, rw_arr)
+    set_idx = lids % sets
+    tag = lids // sets
+    perm = np.argsort(set_idx, kind="stable")
+    counts = np.bincount(set_idx, minlength=sets)
+    depth = int(counts.max())
+    if engine == "auto" and n < 128 * depth:   # skewed/tiny: dict walk wins
+        return filter_trace_rw_seq(config, lids, rw_arr)
+    mask = np.arange(depth)[None, :] < counts[:, None]
+    tag_pad = np.zeros((sets, depth), np.int64)
+    tag_pad[mask] = tag[perm]
+    idx_pad = np.zeros((sets, depth), np.int64)
+    idx_pad[mask] = perm
+    w_pad = np.zeros((sets, depth), bool)
+    w_pad[mask] = rw_arr[perm] == 1
+
+    tags_arr = np.zeros((sets, ways), np.int64)
+    valid = np.zeros((sets, ways), bool)
+    age = np.full((sets, ways), -1, np.int64)
+    dirty = np.zeros((sets, ways), bool)
+    res = _empty_filter_result(n)
+    wb_pos_parts: list[np.ndarray] = []
+    wb_line_parts: list[np.ndarray] = []
+    rows = np.arange(sets)
+    for j in range(depth):
+        live = mask[:, j]
+        t = tag_pad[:, j]
+        match = valid & (tags_arr == t[:, None])
+        hit = match.any(axis=1)
+        way = np.where(hit, match.argmax(axis=1), age.argmin(axis=1))
+        evict = live & ~hit & valid[rows, way] & dirty[rows, way]
+        if evict.any():
+            es = np.flatnonzero(evict)
+            wb_pos_parts.append(idx_pad[es, j])
+            wb_line_parts.append(tags_arr[es, way[es]] * sets + es)
+        r, wsel = rows[live], way[live]
+        gi = idx_pad[live, j]
+        hl = hit[live]
+        wl = w_pad[live, j]
+        old_dirty = dirty[r, wsel]
+        tags_arr[r, wsel] = t[live]
+        valid[r, wsel] = True
+        age[r, wsel] = gi
+        dirty[r, wsel] = np.where(hl, np.where(wl, wb, old_dirty),
+                                  wl & wb)
+        res.hits[gi] = hl
+        res.keep[gi] = ~hl | (wl & (not wb))
+    if wb_pos_parts:
+        pos = np.concatenate(wb_pos_parts)
+        line = np.concatenate(wb_line_parts)
+        order = np.argsort(pos, kind="stable")   # one eviction per miss
+        res.wb_pos, res.wb_line = pos[order], line[order]
+    return res
+
+
 def hit_rate_oracle_seq(
     config: CacheConfig, line_ids: np.ndarray
 ) -> Tuple[np.ndarray, float]:

@@ -34,6 +34,11 @@ model that makes both concrete:
 
 Arbitration and mapping are host-side control plane (numpy), like the
 batch formers: they decide *order* and *cost*, never values.
+
+Since the staged-pipeline refactor (``repro.core.pipeline``, ARCHITECTURE
+§7) the *fast paths* of the two front-end compositions below delegate to
+pipeline stage subsets; the ``use_seq_oracle=True`` compositions keep the
+original request-at-a-time code and remain the bit-identity oracles.
 """
 
 from __future__ import annotations
@@ -79,6 +84,22 @@ class AddressMap:
             return self.timings.row_bytes
         return self.config.interleave_bytes
 
+    def _fold(self, block: np.ndarray) -> np.ndarray:
+        """XOR-fold every log2(c)-bit digit of ``block`` into one digit.
+
+        Masking once at the end is exact: AND distributes over XOR. The
+        fold stops at the widest occupied bit — higher shifts contribute
+        zeros (negative blocks sign-extend, so they take all 64)."""
+        c = self.config.num_channels
+        bits = c.bit_length() - 1
+        hi = int(block.max(initial=0))
+        max_bits = 64 if int(block.min(initial=0)) < 0 \
+            else max(1, hi.bit_length())
+        folded = np.zeros_like(block)
+        for shift in range(0, max_bits, bits):
+            folded ^= block >> shift
+        return (folded & (c - 1)).astype(np.int64)
+
     def channel_of(self, addr) -> np.ndarray:
         addr = np.asarray(addr, dtype=np.int64)
         c = self.config.num_channels
@@ -89,18 +110,8 @@ class AddressMap:
             # Permutation-based interleave: XOR-fold *every* log2(c)-bit
             # digit of the block index into the channel select, so any
             # power-of-two stride (however far above the granularity)
-            # still touches all channels. Masking once at the end is
-            # exact: AND distributes over XOR. The fold stops at the
-            # widest occupied bit — higher shifts contribute zeros
-            # (negative blocks sign-extend, so they take all 64).
-            bits = c.bit_length() - 1
-            hi = int(block.max(initial=0))
-            max_bits = 64 if int(block.min(initial=0)) < 0 \
-                else max(1, hi.bit_length())
-            folded = np.zeros_like(block)
-            for shift in range(0, max_bits, bits):
-                folded ^= block >> shift
-            return (folded & (c - 1)).astype(np.int64)
+            # still touches all channels.
+            return self._fold(block)
         return (block % c).astype(np.int64)
 
     def local_addr(self, addr) -> np.ndarray:
@@ -112,6 +123,27 @@ class AddressMap:
             return addr
         g = self.granularity
         return (addr // g // c) * g + addr % g
+
+    def global_addr(self, channel, local) -> np.ndarray:
+        """Inverse of the bijection: recompose ``(channel, local_addr)``
+        into the flat physical address. For the XOR policy the low block
+        digit is recovered as ``channel XOR fold(group)`` — the fold of
+        ``block = group*c + d`` is ``d XOR fold(group)``, so the XOR
+        cancels. Used by the pipeline's CacheFilter to give victim
+        write-backs a real physical address; round-trip property-tested.
+        """
+        channel = np.asarray(channel, dtype=np.int64)
+        local = np.asarray(local, dtype=np.int64)
+        c = self.config.num_channels
+        if c == 1:
+            return local + np.zeros_like(channel)
+        g = self.granularity
+        group, offset = local // g, local % g
+        if self.config.policy == "xor":
+            low = (channel ^ self._fold(group)) & (c - 1)
+        else:
+            low = channel
+        return (group * c + low) * g + offset
 
     def decompose(self, addr):
         """``(channel, bank, row)`` of each address."""
@@ -459,8 +491,10 @@ def _run_channel(local_ch, rw_ch, *, sched_config, timings,
                  coalesce_writes, use_seq_oracle):
     """One channel's back half — optional scheduler front end, then the
     open-row simulation — with ``use_seq_oracle`` swapping every stage
-    for its request-at-a-time sibling. Shared by both pipelines so the
-    fast path and the oracle composition can never drift apart."""
+    for its request-at-a-time sibling. Since the fast paths moved into
+    ``repro.core.pipeline`` this runs only as the oracle composition
+    (``use_seq_oracle=True``) the pipeline is property-tested against;
+    the flag is kept so the two compositions stay diffable."""
     from repro.core import scheduler as sched
 
     if sched_config is not None:
@@ -492,10 +526,23 @@ def schedule_and_simulate_channels(
     each channel owns a DRAM interface) → per-channel open-row
     simulation → makespan aggregate.
 
-    ``use_seq_oracle`` routes every stage through its request-at-a-time
-    sibling (``schedule_trace_rw_seq`` + per-request classification) —
-    the composition the fast path is property-tested against.
+    The fast path is the staged pipeline (``repro.core.pipeline``:
+    AddressMap → BatchScheduler → DRAMService) viewed through the
+    legacy aggregate. ``use_seq_oracle`` keeps the original
+    request-at-a-time composition (``schedule_trace_rw_seq`` +
+    per-request classification) — the pre-refactor code the pipeline is
+    property-tested bit-identical against.
     """
+    if not use_seq_oracle:
+        from repro.core import pipeline as pipeline_mod
+        stream = pipeline_mod.RequestStream.from_addrs(addrs, rw)
+        ctx = pipeline_mod.PipelineContext(
+            channels=channel_cfg, scheduler=sched_config, cache=None,
+            timings=timings)
+        return pipeline_mod.run_pipeline(
+            stream, ctx, pipeline_mod.default_stages(
+                ctx, cache=False, coalesce_writes=coalesce_writes)
+        ).as_channel_result()
     amap = AddressMap(channel_cfg, timings)
     addrs = np.asarray(addrs, dtype=np.int64).ravel()
     rw_arr = np.zeros(addrs.shape[0], np.int32) if rw is None \
@@ -508,7 +555,7 @@ def schedule_and_simulate_channels(
         per_channel.append(_run_channel(
             local[sel], rw_arr[sel], sched_config=sched_config,
             timings=timings, coalesce_writes=coalesce_writes,
-            use_seq_oracle=use_seq_oracle))
+            use_seq_oracle=True))
         counts.append(int(sel.shape[0]))
     return _aggregate(per_channel, counts, 0.0)
 
@@ -538,10 +585,27 @@ def simulate_multiport_channels(
     channel arbiters: grants and stall slots sum, and ``fairness`` is
     the Jain index of the aggregated per-port grant counts.
 
-    ``use_seq_oracle`` swaps every stage for its sequential sibling
-    (``arbitrate_ports_seq`` / ``schedule_trace_rw_seq`` / per-request
-    channel walk) — the bit-identity oracle for the property tests.
+    The fast path is the staged pipeline (``repro.core.pipeline``:
+    AddressMap → PortArbiter → BatchScheduler → DRAMService) viewed
+    through the legacy aggregate. ``use_seq_oracle`` keeps the original
+    all-sequential composition (``arbitrate_ports_seq`` /
+    ``schedule_trace_rw_seq`` / per-request channel walk) — the
+    pre-refactor code the pipeline is property-tested bit-identical
+    against.
     """
+    if not use_seq_oracle:
+        from repro.core import pipeline as pipeline_mod
+        stream = pipeline_mod.RequestStream.from_addrs(addrs, rw,
+                                                       pe_id=pe_id)
+        ctx = pipeline_mod.PipelineContext(
+            channels=channel_cfg, scheduler=sched_config, cache=None,
+            timings=timings)
+        return pipeline_mod.run_pipeline(
+            stream, ctx, pipeline_mod.default_stages(
+                ctx, ports=num_ports, arbiter_policy=policy,
+                weights=weights, cache=False,
+                coalesce_writes=coalesce_writes)
+        ).as_channel_result()
     amap = AddressMap(channel_cfg, timings)
     addrs = np.asarray(addrs, dtype=np.int64).ravel()
     pe = np.asarray(pe_id, dtype=np.int64).ravel()
@@ -551,7 +615,7 @@ def simulate_multiport_channels(
         else np.asarray(rw, np.int32).ravel()
     ch = amap.channel_of(addrs)
     local = amap.local_addr(addrs)
-    arbitrate = arbitrate_ports_seq if use_seq_oracle else arbitrate_ports
+    arbitrate = arbitrate_ports_seq
 
     per_channel, counts = [], []
     grants = np.zeros(num_ports, dtype=np.int64)

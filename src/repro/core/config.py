@@ -255,3 +255,15 @@ PAPER_EVAL_CONFIG = MemoryControllerConfig(
     dma=DMAConfig(buffer_bytes=16 * 1024, num_parallel_dma=4),
     scheduler=SchedulerConfig(batch_size=64, timeout_cycles=16),
 )
+
+# The headline *combined* configuration: Table IV's cache + scheduler
+# engines composed with the 4-channel front end — the setting where the
+# paper's access-time wins come from the composition of the stages
+# rather than any stage alone (the `simulate()` pipeline's default
+# benchmark target; `benchmarks/perf_pipeline.py`).
+PAPER_COMBINED_CONFIG = MemoryControllerConfig(
+    cache=CacheConfig(line_width_bits=512, num_lines=4096, associativity=4),
+    dma=DMAConfig(buffer_bytes=16 * 1024, num_parallel_dma=4),
+    scheduler=SchedulerConfig(batch_size=64, timeout_cycles=16),
+    channels=ChannelConfig(num_channels=4, policy="row_interleave"),
+)

@@ -30,10 +30,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import channels as channels_mod
-from repro.core import dma_engine, scatter_util, scheduler
+from repro.core import dma_engine, pipeline as pipeline_mod
+from repro.core import scatter_util, scheduler
 from repro.core.config import MemoryControllerConfig
-from repro.core.timing import (DRAMTimings, DDR4_2400, SimResult,
-                               simulate_dram_access)
+from repro.core.pipeline import PipelineResult, RequestStream
+from repro.core.timing import DRAMTimings, DDR4_2400, SimResult
 
 
 def sorted_gather(
@@ -237,16 +238,56 @@ class MemoryController:
         return out.reshape(dst.shape)
 
     # --- modeled performance (benchmark substrate) ---------------------------
+    # Every modeled number below is produced by the staged pipeline
+    # (repro.core.pipeline, ARCHITECTURE §7). ``simulate()`` runs the
+    # full composition — arbitration, address mapping, cache filtering,
+    # batch scheduling, channel-parallel DRAM service, DMA overlap — and
+    # the four ``modeled_*`` entry points are thin wrappers over stage
+    # subsets, property-tested bit-identical to their pre-refactor
+    # outputs (tests/core/test_pipeline.py).
+
+    def _run(self, stream: RequestStream, **stage_kwargs) -> PipelineResult:
+        ctx = pipeline_mod.PipelineContext.from_config(self.config,
+                                                       self.timings)
+        stages = pipeline_mod.default_stages(ctx, **stage_kwargs)
+        return pipeline_mod.run_pipeline(stream, ctx, stages)
+
+    def simulate(
+        self, pe_id, row_ids, rw, row_bytes: int,
+        *, arbiter_policy: str = "round_robin", weights=None,
+        coalesce_writes: bool = False,
+    ) -> PipelineResult:
+        """Full-pipeline simulation of an irregular row trace — the
+        paper's headline composition (cache engine *and* batch scheduler
+        *and* multi-channel service together).
+
+        ``pe_id=None`` models a single-port front end (no arbitration);
+        otherwise the ``config.num_pes`` per-channel arbiters merge the
+        per-PE streams. ``rw=None`` means an all-read trace. Returns a
+        :class:`~repro.core.pipeline.PipelineResult` whose per-stage
+        breakdown sums to ``makespan_fpga_cycles``; the legacy
+        DRAM-only view is ``.as_channel_result()``.
+        """
+        stream = RequestStream.from_rows(row_ids, rw, row_bytes=row_bytes,
+                                         pe_id=pe_id)
+        return self._run(
+            stream,
+            ports=self.config.num_pes if pe_id is not None else None,
+            arbiter_policy=arbiter_policy, weights=weights,
+            cache=True, coalesce_writes=coalesce_writes)
+
     def modeled_gather_time(
         self, row_ids: np.ndarray, row_bytes: int
     ) -> SimResult:
-        """Modeled DRAM access time for an irregular row trace, after the
-        controller's scheduling policy is applied (Fig. 7 methodology)."""
-        addrs = np.asarray(row_ids, dtype=np.int64) * row_bytes
-        served = scheduler.schedule_trace(
-            addrs, np.zeros(addrs.shape[0], np.int32),
-            config=self.config.scheduler, timings=self.timings)
-        return simulate_dram_access(served, self.timings)
+        """Modeled DRAM access time for an irregular read-only row trace,
+        after the controller's scheduling policy is applied (Fig. 7
+        methodology). Pipeline subset: AddressMap → BatchScheduler →
+        DRAMService — so a multi-channel config reports the channel
+        makespan here too (it used to fall back to single-channel
+        numbers); ``num_channels=1`` is bit-identical to the seed
+        ``schedule_trace`` + ``simulate_dram_access`` composition."""
+        stream = RequestStream.from_rows(row_ids, row_bytes=row_bytes)
+        return self._run(stream, cache=False).as_sim_result()
 
     def modeled_access_time(
         self, row_ids: np.ndarray, rw: np.ndarray, row_bytes: int,
@@ -279,13 +320,12 @@ class MemoryController:
         """Multi-channel view of :meth:`modeled_access_time`: the
         configured AddressMap splits the trace, each channel runs its
         own scheduler front end + open-row simulation, and the result
-        carries makespan, per-channel occupancy and hit counts."""
-        addrs = np.asarray(row_ids, dtype=np.int64) * row_bytes
-        return channels_mod.schedule_and_simulate_channels(
-            addrs, np.asarray(rw, dtype=np.int32),
-            sched_config=self.config.scheduler, timings=self.timings,
-            channel_cfg=self.config.channels,
-            coalesce_writes=coalesce_writes)
+        carries makespan, per-channel occupancy and hit counts.
+        Pipeline subset: AddressMap → BatchScheduler → DRAMService."""
+        stream = RequestStream.from_rows(row_ids, rw, row_bytes=row_bytes)
+        return self._run(
+            stream, cache=False,
+            coalesce_writes=coalesce_writes).as_channel_result()
 
     def modeled_multiport_access_time(
         self, pe_id: np.ndarray, row_ids: np.ndarray, rw: np.ndarray,
@@ -296,12 +336,11 @@ class MemoryController:
         for the channels: per-PE streams are merged by the per-channel
         arbiters (round_robin / priority / weighted), scheduled, and
         serviced channel-parallel. The result's ``port_stats`` report
-        per-port grants, stall slots and Jain fairness."""
-        addrs = np.asarray(row_ids, dtype=np.int64) * row_bytes
-        return channels_mod.simulate_multiport_channels(
-            pe_id, addrs, np.asarray(rw, dtype=np.int32),
-            num_ports=self.config.num_pes, policy=policy, weights=weights,
-            timings=self.timings, channel_cfg=self.config.channels,
-            sched_config=(self.config.scheduler
-                          if self.config.scheduler.enabled else None),
-            coalesce_writes=coalesce_writes)
+        per-port grants, stall slots and Jain fairness. Pipeline subset:
+        AddressMap → PortArbiter → BatchScheduler → DRAMService."""
+        stream = RequestStream.from_rows(row_ids, rw, row_bytes=row_bytes,
+                                         pe_id=pe_id)
+        return self._run(
+            stream, ports=self.config.num_pes, arbiter_policy=policy,
+            weights=weights, cache=False,
+            coalesce_writes=coalesce_writes).as_channel_result()

@@ -340,6 +340,27 @@ def form_batches_typed(
                            size=sizes[q], seq=q.astype(np.int64))
 
 
+def count_batches(
+    rw: Sequence[int],
+    arrival_cycle: Sequence[int] | None = None,
+    *,
+    config: SchedulerConfig,
+) -> int:
+    """Number of batches the dual-queue former emits for a trace — the
+    per-batch Eq. 1 charge count of the pipeline's overlap model. Uses
+    the same boundary plan as :func:`form_batches_typed`, so on a
+    saturated all-read trace it reduces to ``ceil(n / batch_size)``."""
+    if not config.enabled:
+        return 0
+    rw_arr = np.asarray(rw, dtype=np.int32).ravel()
+    n = rw_arr.shape[0]
+    if arrival_cycle is None:
+        arrival = np.zeros(n, dtype=np.int64)
+    else:
+        arrival = np.asarray(arrival_cycle, dtype=np.int64)
+    return len(_typed_batch_plan(rw_arr, arrival, config))
+
+
 def reorder_batch(
     batch: RequestBatch, timings: DRAMTimings = DDR4_2400
 ) -> RequestBatch:

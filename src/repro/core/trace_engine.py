@@ -44,6 +44,12 @@ Two passes:
 
 Lane counts and chunk lengths are rounded to powers of two so repeated
 calls with similar trace shapes reuse the same compiled kernel.
+
+The same set-partition argument powers two numpy siblings in
+``cache_engine``: ``hit_rate_oracle`` (hit mask only) and
+``filter_trace_rw`` (hit mask + keep set + victim write-backs — the
+staged pipeline's CacheFilter stage, ARCHITECTURE §7), both lockstep
+per-set walks validated against their dict-walk oracles.
 """
 
 from __future__ import annotations

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.models import layers
 
@@ -52,7 +53,7 @@ def moe_ffn_ep(p, x, cfg: ArchConfig, mesh, *, no_drop: bool = False):
     B, S, D = x.shape
 
     @partial(
-        jax.shard_map,
+        compat.shard_map,
         mesh=mesh,
         in_specs=(
             {"ln": P(), "router": P(),

@@ -81,11 +81,11 @@ def test_compressed_psum_error_feedback_unbiased():
 
     def one(axis_g, axis_r):
         # single-device psum via shard_map over a trivial mesh
+        from repro.compat import P, shard_map
         mesh = jax.make_mesh((1,), ("pod",))
-        f = jax.shard_map(
+        f = shard_map(
             lambda gg, rr: compressed_psum(gg, rr, "pod", mode="int8"),
-            mesh=mesh, in_specs=(jax.P(), jax.P()),
-            out_specs=(jax.P(), jax.P()))
+            mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))
         return f(axis_g, axis_r)
 
     for _ in range(50):
