@@ -1,0 +1,188 @@
+"""DRAM command-scheduler benchmark — policy x reorder-window sweep on
+the GCN/CNN traces (the "Memory Controller Wall" experiment: how much
+of the naive-interface gap does a bounded reorder window recover?).
+
+Every configuration runs the engines-off controller
+(``MemoryController.simulate`` with batch scheduler and cache disabled)
+so the *only* difference between rows is the DRAM command scheduler:
+
+  fifo        — strict arrival-order issue (the pre-PR service model);
+  frfcfs      — oldest-row-ready-first within a ``reorder_window``;
+  frfcfs_cap  — FR-FCFS with ``starvation_cap=16`` slip bound;
+  + a DDR4-realistic refresh row (tRFC 350ns / tREFI 7.8us in command
+    clocks) showing the refresh tax on the best window.
+
+Acceptance (ISSUE 5), recorded machine-readably:
+
+* ``frfcfs_w8_beats_fifo_gcn`` — FR-FCFS at window >= 8 strictly beats
+  the FIFO makespan on the GCN trace;
+* ``window1_bit_identical`` — window=1 reproduces the pre-PR simulators
+  bit for bit (both the pipeline makespan vs the FIFO config and the
+  raw classifier vs ``simulate_dram_access_windowed(window=1)``).
+
+The JSON also carries the combined-configuration row (cache + batch
+scheduler + channels + FR-FCFS) and the fast-path-vs-oracle speedup of
+the simulator itself. Writes ``BENCH_dram_sched.json``; ``--small``
+(~50k requests) is the CI perf-smoke configuration.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from benchmarks.perf_pipeline import (ROW_BYTES, cnn_style_trace,
+                                      gcn_style_trace)
+from repro.core.config import (CacheConfig, DRAMSchedConfig,
+                               MemoryControllerConfig,
+                               PAPER_COMBINED_CONFIG, SchedulerConfig)
+from repro.core.controller import MemoryController
+from repro.core.timing import (DDR4_2400, simulate_dram_access_windowed,
+                               simulate_dram_sched,
+                               simulate_dram_sched_seq)
+
+WINDOWS = (1, 4, 8, 16, 32, 64)
+# DDR4-2400 8Gb refresh in command clocks: tRFC ~350ns, tREFI ~7.8us
+T_RFC, T_REFI = 420, 9363
+
+BARE = MemoryControllerConfig(
+    scheduler=SchedulerConfig(enabled=False),
+    cache=CacheConfig(enabled=False))
+
+
+def _with_sched(base: MemoryControllerConfig,
+                **kw) -> MemoryControllerConfig:
+    return dataclasses.replace(base, dram_sched=DRAMSchedConfig(**kw))
+
+
+def _makespan(cfg, rows, rw) -> tuple[float, float]:
+    mc = MemoryController(cfg)
+    t0 = time.perf_counter()
+    res = mc.simulate(None, rows, rw, ROW_BYTES)
+    return res.makespan_fpga_cycles, (time.perf_counter() - t0) * 1e6
+
+
+def run(n_requests: int = 200_000) -> dict:
+    rng = np.random.default_rng(0)
+    traces = {
+        "gcn_style": gcn_style_trace(rng, n_requests),
+        "cnn_style": cnn_style_trace(rng, n_requests),
+    }
+    results: dict = {
+        "benchmark": "dram_command_scheduler_sweep",
+        "unit": "modeled_fpga_cycles",
+        "n_requests": n_requests,
+        "row_bytes": ROW_BYTES,
+        "windows": list(WINDOWS),
+        "refresh_model": {"t_rfc": T_RFC, "t_refi": T_REFI},
+        "note": ("engines-off controller isolates the DRAM command "
+                 "scheduler; window=1 and policy=fifo are bit-identical "
+                 "to the pre-PR FIFO service (tests/core/"
+                 "test_dram_sched.py pins this per request)"),
+        "workloads": {},
+    }
+    fifo_raw: dict[str, float] = {}
+    for tname, (rows, rw) in traces.items():
+        rec: dict = {"fifo": {}, "frfcfs": {}, "frfcfs_cap": {}}
+        fifo_ms, dt = _makespan(BARE, rows, rw)
+        fifo_raw[tname] = fifo_ms
+        rec["fifo"]["1"] = round(fifo_ms)
+        emit(f"perf_dram_sched/{tname}/fifo_w1", dt,
+             f"makespan={round(fifo_ms)}")
+        for policy in ("frfcfs", "frfcfs_cap"):
+            for w in WINDOWS[1:]:
+                ms, dt = _makespan(
+                    _with_sched(BARE, policy=policy, reorder_window=w,
+                                starvation_cap=16), rows, rw)
+                rec[policy][str(w)] = round(ms)
+                emit(f"perf_dram_sched/{tname}/{policy}_w{w}", dt,
+                     f"makespan={round(ms)}|"
+                     f"speedup_vs_fifo={fifo_ms / ms:.3f}x")
+        # refresh tax on the best frfcfs window
+        best_w = min(rec["frfcfs"], key=lambda k: rec["frfcfs"][k])
+        ms_ref, dt = _makespan(
+            _with_sched(BARE, policy="frfcfs",
+                        reorder_window=int(best_w),
+                        t_rfc=T_RFC, t_refi=T_REFI), rows, rw)
+        rec["frfcfs_refresh"] = {best_w: round(ms_ref)}
+        emit(f"perf_dram_sched/{tname}/frfcfs_w{best_w}_refresh", dt,
+             f"makespan={round(ms_ref)}|"
+             f"refresh_tax={ms_ref / rec['frfcfs'][best_w]:.4f}x")
+        rec["speedup_vs_fifo_at_w8"] = round(
+            fifo_ms / rec["frfcfs"]["8"], 4)
+        results["workloads"][tname] = rec
+
+    # ---- acceptance records ------------------------------------------
+    g = results["workloads"]["gcn_style"]
+    results["frfcfs_w8_beats_fifo_gcn"] = bool(
+        all(g["frfcfs"][str(w)] < g["fifo"]["1"] for w in (8, 16, 32, 64)))
+
+    rows, rw = traces["gcn_style"]
+    sub = rows[:20_000]
+    w1_pipeline, _ = _makespan(
+        _with_sched(BARE, policy="frfcfs", reorder_window=1), rows, rw)
+    raw_w1 = simulate_dram_sched(
+        sub * ROW_BYTES, DDR4_2400,
+        DRAMSchedConfig(policy="frfcfs", reorder_window=1))
+    raw_old = simulate_dram_access_windowed(sub * ROW_BYTES, DDR4_2400,
+                                            window=1)
+    results["window1_bit_identical"] = bool(
+        w1_pipeline == fifo_raw["gcn_style"]
+        and raw_w1.total_fpga_cycles == raw_old.total_fpga_cycles
+        and (raw_w1.row_hits, raw_w1.row_conflicts,
+             raw_w1.first_accesses) == (raw_old.row_hits,
+                                        raw_old.row_conflicts,
+                                        raw_old.first_accesses))
+
+    # combined headline config with and without FR-FCFS service
+    comb_rec = {}
+    for label, cfg in (
+            ("fifo", PAPER_COMBINED_CONFIG),
+            ("frfcfs16", _with_sched(PAPER_COMBINED_CONFIG,
+                                     policy="frfcfs",
+                                     reorder_window=16))):
+        ms, dt = _makespan(cfg, rows, rw)
+        comb_rec[label] = round(ms)
+        emit(f"perf_dram_sched/gcn_style/combined_{label}", dt,
+             f"makespan={round(ms)}")
+    comb_rec["frfcfs_helps_combined"] = bool(
+        comb_rec["frfcfs16"] < comb_rec["fifo"])
+    results["combined_config"] = comb_rec
+
+    # simulator-throughput record: fast path vs request-at-a-time oracle
+    sched = DRAMSchedConfig(policy="frfcfs", reorder_window=32)
+    n_perf = min(20_000, rows.shape[0])
+    addrs = rows[:n_perf] * ROW_BYTES
+    t0 = time.perf_counter()
+    fast = simulate_dram_sched(addrs, DDR4_2400, sched, rw[:n_perf])
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    seq = simulate_dram_sched_seq(addrs, DDR4_2400, sched, rw[:n_perf])
+    t_seq = time.perf_counter() - t0
+    assert fast.total_fpga_cycles == seq.total_fpga_cycles
+    results["fast_path_speedup_vs_oracle_w32"] = round(t_seq / t_fast, 2)
+    emit("perf_dram_sched/fast_vs_oracle", t_fast * 1e6,
+         f"speedup={t_seq / t_fast:.1f}x|n={n_perf}")
+
+    write_bench_json("dram_sched", results)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--small", action="store_true",
+                    help="CI perf-smoke size (~50k requests)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="override trace length")
+    args = ap.parse_args()
+    n = args.n or (50_000 if args.small else 200_000)
+    print("name,us_per_call,derived")
+    run(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,9 +20,11 @@ accumulates per PR (the pipeline probe runs at full size so the
 tracked artifact stays stable; CI smoke uses ``--small``);
 ``benchmarks/perf_trace_engine.py`` (run separately — it is
 minutes-long at full size) writes ``BENCH_trace_engine.json`` for the
-simulator's own throughput, and ``benchmarks/perf_channels.py`` (also
+simulator's own throughput, ``benchmarks/perf_channels.py`` (also
 separate) writes ``BENCH_channels.json`` for the multi-channel /
-multi-port front end.
+multi-port front end, and ``benchmarks/perf_dram_sched.py`` (also
+separate) writes ``BENCH_dram_sched.json`` for the out-of-order DRAM
+command scheduler sweep.
 """
 
 from benchmarks import (autotune_bench, fig5_dma_resources,

@@ -1,0 +1,37 @@
+"""Regenerate the golden pipeline snapshots in ``tests/goldens/``.
+
+Run from the repo root after an *intentional* model change:
+
+    PYTHONPATH=src:tests/core python scripts/regen_goldens.py
+
+then review the JSON diffs — every changed number is a modeled-behavior
+change the PR must be able to explain. The case definitions live in
+``tests/core/golden_cases.py`` (shared with the checking test, so the
+writer and the checker can never disagree).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "tests", "core"))
+
+from golden_cases import CASES, GOLDEN_DIR, golden_record  # noqa: E402
+
+
+def main() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name in CASES:
+        path = os.path.join(GOLDEN_DIR, f"{name}.json")
+        record = golden_record(name)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}  (makespan={record['makespan_fpga_cycles']:.1f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,25 +10,30 @@ from repro.core.channels import (AddressMap, ArbiterStats, ChannelSimResult,
                                  arbitrate_ports, simulate_channels,
                                  simulate_multiport_channels)
 from repro.core.config import (CacheConfig, ChannelConfig, DMAConfig,
-                               MemoryControllerConfig, PAPER_COMBINED_CONFIG,
-                               PAPER_EVAL_CONFIG, SchedulerConfig)
+                               DRAMSchedConfig, MemoryControllerConfig,
+                               PAPER_COMBINED_CONFIG, PAPER_EVAL_CONFIG,
+                               SchedulerConfig)
 from repro.core.controller import (HotRowCache, MemoryController,
                                    sorted_gather, sorted_scatter)
 from repro.core.pipeline import (PipelineContext, PipelineResult,
                                  RequestStream, StageStats, default_stages,
                                  run_pipeline)
 from repro.core.timing import (DDR4_2400, DRAMTimings, HBM_V5E,
-                               roofline_time_s, simulate_dram_access,
-                               t_schedule, turnaround_cycles)
+                               SchedSimResult, roofline_time_s,
+                               simulate_dram_access, simulate_dram_sched,
+                               simulate_dram_sched_seq, t_schedule,
+                               turnaround_cycles)
 
 __all__ = [
-    "CacheConfig", "ChannelConfig", "DMAConfig", "MemoryControllerConfig",
+    "CacheConfig", "ChannelConfig", "DMAConfig", "DRAMSchedConfig",
+    "MemoryControllerConfig",
     "SchedulerConfig", "PAPER_EVAL_CONFIG", "PAPER_COMBINED_CONFIG",
     "HotRowCache", "MemoryController", "sorted_gather", "sorted_scatter",
     "AddressMap", "ArbiterStats", "ChannelSimResult", "arbitrate_ports",
     "simulate_channels", "simulate_multiport_channels", "PipelineContext",
     "PipelineResult", "RequestStream", "StageStats", "default_stages",
     "run_pipeline", "DDR4_2400", "HBM_V5E", "DRAMTimings",
-    "roofline_time_s", "simulate_dram_access", "t_schedule",
+    "SchedSimResult", "roofline_time_s", "simulate_dram_access",
+    "simulate_dram_sched", "simulate_dram_sched_seq", "t_schedule",
     "turnaround_cycles",
 ]

@@ -18,7 +18,8 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.config import (CacheConfig, ChannelConfig, DMAConfig,
-                               MemoryControllerConfig, SchedulerConfig)
+                               DRAMSchedConfig, MemoryControllerConfig,
+                               SchedulerConfig)
 from repro.core.pipeline import (PipelineContext, RequestStream,
                                  default_stages, run_pipeline)
 from repro.core.timing import DRAMTimings, DDR4_2400
@@ -69,6 +70,9 @@ def tune(
     dma_channels: Sequence[int] = (1, 2, 4, 8),
     num_channels: Sequence[int] = (1,),
     mapping_policies: Sequence[str] = ("row_interleave",),
+    dram_sched_policies: Sequence[str] = ("fifo",),
+    reorder_windows: Sequence[int] = (1,),
+    starvation_cap: int = 16,
     enable_cache: bool = True,
     timings: DRAMTimings = DDR4_2400,
 ) -> TuneResult:
@@ -78,6 +82,11 @@ def tune(
     multi-channel front end's axes (``ChannelConfig``); the defaults keep
     the paper's single-interface search space. With one channel every
     mapping policy is the identity, so only the first policy is scored.
+
+    ``dram_sched_policies`` × ``reorder_windows`` add the DRAM command
+    scheduler's axes (``DRAMSchedConfig``): FIFO never reorders, so it
+    is scored at one window only, and window 1 collapses every policy
+    to FIFO — redundant grid points are deduplicated before scoring.
     """
     row_ids = np.asarray(row_ids)
     best_cfg, best_cycles, table = None, float("inf"), []
@@ -88,6 +97,9 @@ def tune(
     chan_grid = [(nc, pol) for nc in num_channels
                  for pol in (mapping_policies if nc > 1
                              else mapping_policies[:1])]
+    sched_grid = sorted({
+        ("fifo", 1) if (pol == "fifo" or win == 1) else (pol, win)
+        for pol in dram_sched_policies for win in reorder_windows})
     # The cache-filtered stream — the expensive full-trace scan — depends
     # only on the cache shape and the channel mapping, not on batch/dma
     # axes: the CacheFilter stage memoizes it per (cache, channels) shape
@@ -100,26 +112,31 @@ def tune(
                 continue
             for ch in dma_channels:
                 for nc, policy in chan_grid:
-                    cfg = MemoryControllerConfig(
-                        scheduler=SchedulerConfig(batch_size=batch),
-                        cache=CacheConfig(enabled=enable_cache,
-                                          num_lines=lines,
-                                          associativity=ways),
-                        dma=DMAConfig(num_parallel_dma=ch),
-                        channels=ChannelConfig(num_channels=nc,
-                                               policy=policy),
-                    )
-                    if cfg.vmem_footprint_bytes() > vmem_budget_bytes:
-                        continue
-                    n_eval += 1
-                    cycles = _score(cfg, row_ids, row_bytes, timings,
-                                    memo=filter_memo)
-                    table.append((
-                        f"batch={batch} ways={ways} lines={lines} "
-                        f"dma={ch} mem_ch={nc} map={policy}",
-                        cycles))
-                    if cycles < best_cycles:
-                        best_cfg, best_cycles = cfg, cycles
+                    for spol, win in sched_grid:
+                        cfg = MemoryControllerConfig(
+                            scheduler=SchedulerConfig(batch_size=batch),
+                            cache=CacheConfig(enabled=enable_cache,
+                                              num_lines=lines,
+                                              associativity=ways),
+                            dma=DMAConfig(num_parallel_dma=ch),
+                            channels=ChannelConfig(num_channels=nc,
+                                                   policy=policy),
+                            dram_sched=DRAMSchedConfig(
+                                policy=spol, reorder_window=win,
+                                starvation_cap=starvation_cap),
+                        )
+                        if cfg.vmem_footprint_bytes() > vmem_budget_bytes:
+                            continue
+                        n_eval += 1
+                        cycles = _score(cfg, row_ids, row_bytes, timings,
+                                        memo=filter_memo)
+                        table.append((
+                            f"batch={batch} ways={ways} lines={lines} "
+                            f"dma={ch} mem_ch={nc} map={policy} "
+                            f"dsched={spol}:{win}",
+                            cycles))
+                        if cycles < best_cycles:
+                            best_cfg, best_cycles = cfg, cycles
     if best_cfg is None:
         raise ValueError("no feasible configuration under the VMEM budget")
     return TuneResult(config=best_cfg, modeled_cycles=best_cycles,

@@ -49,9 +49,10 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.config import ChannelConfig, SchedulerConfig
+from repro.core.config import ChannelConfig, DRAMSchedConfig, SchedulerConfig
 from repro.core.timing import (DRAMTimings, DDR4_2400, SimResult,
-                               simulate_dram_access)
+                               simulate_dram_access, simulate_dram_sched,
+                               simulate_dram_sched_seq)
 
 ARBITER_POLICIES = ("round_robin", "priority", "weighted")
 
@@ -397,13 +398,35 @@ def simulate_channels_seq(
     timings: DRAMTimings = DDR4_2400,
     channel_cfg: ChannelConfig = ChannelConfig(),
     rw: np.ndarray | None = None,
+    dram_sched: DRAMSchedConfig | None = None,
 ) -> ChannelSimResult:
     """Reference channel simulator — one python iteration per request,
     walking the global trace in arrival order against per-channel
     per-bank open-row state (and per-channel last-direction state for
     the tWTR/tRTW turnarounds). Kept as the oracle
-    :func:`simulate_channels` is property-tested against."""
+    :func:`simulate_channels` is property-tested against.
+
+    ``dram_sched`` swaps each channel's interface for the out-of-order
+    command scheduler oracle
+    (:func:`repro.core.timing.simulate_dram_sched_seq`): channels stay
+    exactly independent (a reorder window spans only its own channel's
+    queue), so the walk decomposes per channel.
+    """
     amap = AddressMap(channel_cfg, timings)
+    if dram_sched is not None and (dram_sched.effective_window > 1
+                                   or dram_sched.t_refi):
+        addrs = np.asarray(addrs, dtype=np.int64).ravel()
+        ch = amap.channel_of(addrs)
+        local = amap.local_addr(addrs)
+        rw_arr = None if rw is None else np.asarray(rw, np.int32).ravel()
+        per_channel, counts = [], []
+        for k in range(channel_cfg.num_channels):
+            sel = np.flatnonzero(ch == k)   # stable: keeps arrival order
+            per_channel.append(simulate_dram_sched_seq(
+                local[sel], timings, dram_sched,
+                rw=None if rw_arr is None else rw_arr[sel]))
+            counts.append(int(sel.shape[0]))
+        return _aggregate(per_channel, counts, 0.0)
     addrs = np.asarray(addrs, dtype=np.int64).ravel()
     c = channel_cfg.num_channels
     ch = amap.channel_of(addrs)
@@ -455,6 +478,7 @@ def simulate_channels(
     timings: DRAMTimings = DDR4_2400,
     channel_cfg: ChannelConfig = ChannelConfig(),
     rw: np.ndarray | None = None,
+    dram_sched: DRAMSchedConfig | None = None,
 ) -> ChannelSimResult:
     """Channel-parallel open-row simulation — bit-identical to
     :func:`simulate_channels_seq`.
@@ -464,7 +488,9 @@ def simulate_channels(
     channel's rw substream), so the trace is partitioned by channel —
     arrival order preserved within each channel by a stable selection —
     and every channel runs the vectorized
-    :func:`~repro.core.timing.simulate_dram_access` on its *local*
+    :func:`~repro.core.timing.simulate_dram_access` (or, with
+    ``dram_sched``, the out-of-order command scheduler
+    :func:`~repro.core.timing.simulate_dram_sched`) on its *local*
     addresses.
     """
     amap = AddressMap(channel_cfg, timings)
@@ -476,9 +502,13 @@ def simulate_channels(
     per_channel, counts = [], []
     for k in range(c):
         sel = np.flatnonzero(ch == k)       # stable: keeps arrival order
-        per_channel.append(simulate_dram_access(
-            local[sel], timings,
-            rw=None if rw_arr is None else rw_arr[sel]))
+        sub_rw = None if rw_arr is None else rw_arr[sel]
+        if dram_sched is not None:
+            per_channel.append(simulate_dram_sched(
+                local[sel], timings, dram_sched, rw=sub_rw))
+        else:
+            per_channel.append(simulate_dram_access(
+                local[sel], timings, rw=sub_rw))
         counts.append(int(sel.shape[0]))
     return _aggregate(per_channel, counts, 0.0)
 
@@ -488,7 +518,7 @@ def simulate_channels(
 # ---------------------------------------------------------------------------
 
 def _run_channel(local_ch, rw_ch, *, sched_config, timings,
-                 coalesce_writes, use_seq_oracle):
+                 coalesce_writes, use_seq_oracle, dram_sched=None):
     """One channel's back half — optional scheduler front end, then the
     open-row simulation — with ``use_seq_oracle`` swapping every stage
     for its request-at-a-time sibling. Since the fast paths moved into
@@ -506,8 +536,15 @@ def _run_channel(local_ch, rw_ch, *, sched_config, timings,
     else:
         served, served_rw = local_ch, rw_ch
     if use_seq_oracle:
+        if dram_sched is not None and (dram_sched.effective_window > 1
+                                       or dram_sched.t_refi):
+            return simulate_dram_sched_seq(served, timings, dram_sched,
+                                           rw=served_rw)
         return simulate_channels_seq(served, timings, ChannelConfig(),
                                      rw=served_rw).per_channel[0]
+    if dram_sched is not None:
+        return simulate_dram_sched(served, timings, dram_sched,
+                                   rw=served_rw)
     return simulate_dram_access(served, timings, rw=served_rw)
 
 
@@ -520,6 +557,7 @@ def schedule_and_simulate_channels(
     channel_cfg: ChannelConfig = ChannelConfig(),
     coalesce_writes: bool = False,
     use_seq_oracle: bool = False,
+    dram_sched: DRAMSchedConfig | None = None,
 ) -> ChannelSimResult:
     """Single-port multi-channel pipeline: map → per-channel scheduler
     (each channel owns a batch former + bitonic sorter, exactly like
@@ -531,14 +569,16 @@ def schedule_and_simulate_channels(
     legacy aggregate. ``use_seq_oracle`` keeps the original
     request-at-a-time composition (``schedule_trace_rw_seq`` +
     per-request classification) — the pre-refactor code the pipeline is
-    property-tested bit-identical against.
+    property-tested bit-identical against. ``dram_sched`` gives every
+    channel's interface the out-of-order command scheduler (oracle
+    sibling on the seq path).
     """
     if not use_seq_oracle:
         from repro.core import pipeline as pipeline_mod
         stream = pipeline_mod.RequestStream.from_addrs(addrs, rw)
         ctx = pipeline_mod.PipelineContext(
             channels=channel_cfg, scheduler=sched_config, cache=None,
-            timings=timings)
+            timings=timings, dram_sched=dram_sched)
         return pipeline_mod.run_pipeline(
             stream, ctx, pipeline_mod.default_stages(
                 ctx, cache=False, coalesce_writes=coalesce_writes)
@@ -555,7 +595,7 @@ def schedule_and_simulate_channels(
         per_channel.append(_run_channel(
             local[sel], rw_arr[sel], sched_config=sched_config,
             timings=timings, coalesce_writes=coalesce_writes,
-            use_seq_oracle=True))
+            use_seq_oracle=True, dram_sched=dram_sched))
         counts.append(int(sel.shape[0]))
     return _aggregate(per_channel, counts, 0.0)
 
@@ -573,6 +613,7 @@ def simulate_multiport_channels(
     sched_config: SchedulerConfig | None = None,
     coalesce_writes: bool = False,
     use_seq_oracle: bool = False,
+    dram_sched: DRAMSchedConfig | None = None,
 ) -> ChannelSimResult:
     """Full front end: per-PE streams → per-channel arbiter → optional
     per-channel scheduler → channel-parallel DRAM simulation.
@@ -599,7 +640,7 @@ def simulate_multiport_channels(
                                                        pe_id=pe_id)
         ctx = pipeline_mod.PipelineContext(
             channels=channel_cfg, scheduler=sched_config, cache=None,
-            timings=timings)
+            timings=timings, dram_sched=dram_sched)
         return pipeline_mod.run_pipeline(
             stream, ctx, pipeline_mod.default_stages(
                 ctx, ports=num_ports, arbiter_policy=policy,
@@ -630,7 +671,7 @@ def simulate_multiport_channels(
         per_channel.append(_run_channel(
             local[order], rw_arr[order], sched_config=sched_config,
             timings=timings, coalesce_writes=coalesce_writes,
-            use_seq_oracle=use_seq_oracle))
+            use_seq_oracle=use_seq_oracle, dram_sched=dram_sched))
         counts.append(int(sel.shape[0]))
     port_stats = ArbiterStats(grants=grants, stall_slots=stalls,
                               fairness=_jain(grants))

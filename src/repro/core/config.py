@@ -141,6 +141,71 @@ class ChannelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class DRAMSchedConfig:
+    """DRAM command-scheduler parameters (the controller's back end).
+
+    The front-end batch scheduler reorders *requests* before they reach
+    the memory interface; this config governs how the interface itself
+    issues *DRAM commands* out of its pending queue — the reordering
+    class "The Memory Controller Wall" (arXiv:1910.06726) shows
+    separates naive interface IPs from real controllers. [TUNE]
+
+    ``policy``:
+      "fifo"        — strict arrival order (the pre-scheduler model);
+      "frfcfs"      — first-ready, first-come-first-served: within a
+                      ``reorder_window`` lookahead, the oldest request
+                      that hits an already-open row is issued first;
+                      misses are issued oldest-first when no pending
+                      request is row-ready;
+      "frfcfs_cap"  — FR-FCFS with a starvation cap: once
+                      ``starvation_cap`` younger requests have been
+                      issued past a waiting request, it is forced out
+                      next (bounds per-request slip; property-tested).
+
+    ``t_rfc`` / ``t_refi`` model refresh (in DRAM command clocks):
+    every ``t_refi`` cycles of service a channel stalls for ``t_rfc``
+    and all its banks precharge (open rows close). ``t_refi=0``
+    disables refresh (the pre-refresh model).
+    """
+
+    policy: str = "fifo"
+    #: lookahead window (pending DRAM commands eligible for promotion).
+    #: 1 degenerates to FIFO regardless of policy.
+    reorder_window: int = 1
+    #: max younger issues past a waiting request before it is forced
+    #: (only consulted by "frfcfs_cap").
+    starvation_cap: int = 16
+    #: refresh cycle time (stall per refresh), DRAM clocks.
+    t_rfc: int = 0
+    #: average refresh interval, DRAM clocks; 0 disables refresh.
+    t_refi: int = 0
+
+    _POLICIES = ("fifo", "frfcfs", "frfcfs_cap")
+
+    def __post_init__(self) -> None:
+        if self.policy not in self._POLICIES:
+            raise ValueError(
+                f"dram_sched.policy={self.policy!r} must be one of "
+                f"{self._POLICIES}")
+        _check_range("dram_sched.reorder_window", self.reorder_window,
+                     1, 512)
+        _check_range("dram_sched.starvation_cap", self.starvation_cap,
+                     1, 1 << 20)
+        if self.t_rfc < 0 or self.t_refi < 0:
+            raise ValueError("dram_sched t_rfc/t_refi must be >= 0")
+        if self.t_refi and self.t_rfc >= self.t_refi:
+            raise ValueError(
+                f"dram_sched.t_rfc={self.t_rfc} must be strictly less "
+                f"than t_refi={self.t_refi}: the channel would refresh "
+                "longer than it services")
+
+    @property
+    def effective_window(self) -> int:
+        """The window actually applied: FIFO never reorders."""
+        return 1 if self.policy == "fifo" else self.reorder_window
+
+
+@dataclasses.dataclass(frozen=True)
 class DMAConfig:
     """DMA engine parameters (Table I, 'Direct Memory Access')."""
 
@@ -178,6 +243,8 @@ class MemoryControllerConfig:
     cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
     dma: DMAConfig = dataclasses.field(default_factory=DMAConfig)
     channels: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+    dram_sched: DRAMSchedConfig = dataclasses.field(
+        default_factory=DRAMSchedConfig)
     # FLIT generation + path-selection latency budget (paper: <= 10 cycles).
     ctrl_overhead_cycles: int = 10
 
@@ -217,6 +284,11 @@ class MemoryControllerConfig:
             n = self.scheduler.batch_size
             total += self.channels.num_channels * (
                 2 * n * 8 + 2 * n * self.app_io_data_width_bytes)
+        # DRAM command scheduler: each channel holds a reorder CAM of
+        # pending commands (addr tag + bank/row decode + age counter,
+        # ~16B per entry). A 1-deep window is the plain FIFO head.
+        total += (self.channels.num_channels
+                  * self.dram_sched.effective_window * 16)
         return total
 
     def describe(self) -> str:
@@ -238,6 +310,10 @@ class MemoryControllerConfig:
             f"  mem channels: {self.channels.num_channels} "
             f"({self.channels.policy}, "
             f"interleave={self.channels.interleave_bytes}B)",
+            f"  dram sched: {self.dram_sched.policy} "
+            f"window={self.dram_sched.effective_window} "
+            f"cap={self.dram_sched.starvation_cap} "
+            f"refresh={'off' if not self.dram_sched.t_refi else f'{self.dram_sched.t_rfc}/{self.dram_sched.t_refi}'}",
             f"  vmem footprint ~ {self.vmem_footprint_bytes() / 1024:.1f} KiB",
         ]
         return "\n".join(lines)

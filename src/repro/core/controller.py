@@ -267,6 +267,12 @@ class MemoryController:
         :class:`~repro.core.pipeline.PipelineResult` whose per-stage
         breakdown sums to ``makespan_fpga_cycles``; the legacy
         DRAM-only view is ``.as_channel_result()``.
+
+        ``config.dram_sched`` selects each channel interface's DRAM
+        *command* scheduler (fifo / frfcfs / frfcfs_cap + refresh,
+        ARCHITECTURE §8): the default FIFO window-1 model is
+        bit-identical to the pre-PR service stage, pinned by the
+        golden-trace suite (``tests/core/test_golden_pipeline.py``).
         """
         stream = RequestStream.from_rows(row_ids, rw, row_bytes=row_bytes,
                                          pe_id=pe_id)

@@ -54,10 +54,11 @@ import numpy as np
 from repro.core import cache_engine
 from repro.core import channels as channels_mod
 from repro.core import scheduler as scheduler_mod
-from repro.core.config import (CacheConfig, ChannelConfig,
+from repro.core.config import (CacheConfig, ChannelConfig, DRAMSchedConfig,
                                MemoryControllerConfig, SchedulerConfig)
 from repro.core.timing import (DRAMTimings, SimResult,
-                               simulate_dram_access, t_overlapped_schedule)
+                               simulate_dram_access, simulate_dram_sched,
+                               t_overlapped_schedule)
 
 _INT64_MAX = np.iinfo(np.int64).max
 
@@ -170,6 +171,9 @@ class PipelineContext:
     cache: CacheConfig | None
     timings: DRAMTimings
     ctrl_overhead_cycles: float = 0.0
+    #: DRAM command scheduler (FR-FCFS + refresh); ``None`` keeps the
+    #: strict-FIFO service model of the pre-scheduler pipeline.
+    dram_sched: DRAMSchedConfig | None = None
     # blackboard (written by stages, read by later stages / the runner):
     requests_per_channel: list[int] | None = None   # AddressMap
     sched_batches: int = 0                          # BatchScheduler
@@ -180,7 +184,8 @@ class PipelineContext:
                     timings: DRAMTimings) -> "PipelineContext":
         return cls(channels=config.channels, scheduler=config.scheduler,
                    cache=config.cache, timings=timings,
-                   ctrl_overhead_cycles=float(config.ctrl_overhead_cycles))
+                   ctrl_overhead_cycles=float(config.ctrl_overhead_cycles),
+                   dram_sched=config.dram_sched)
 
     @property
     def num_channels(self) -> int:
@@ -457,27 +462,58 @@ class BatchSchedulerStage:
 
 @dataclasses.dataclass
 class DRAMServiceStage:
-    """Channel-parallel open-row DRAM service: each channel's serviced
-    stream is classified against its own bank/row state (tWTR/tRTW
-    turnarounds included), and the stage charges the *makespan* — the
-    slowest channel — since channels drain concurrently."""
+    """Channel-parallel DRAM service: each channel issues its stream
+    against its own bank/row state (tWTR/tRTW turnarounds included) and
+    the stage charges the *makespan* — the slowest channel — since
+    channels drain concurrently.
+
+    ``ctx.dram_sched`` selects the command scheduler each channel's
+    interface runs: strict FIFO (``None`` / window 1 — the classic
+    arrival-order classification, bit-identical to the pre-scheduler
+    stage) or FR-FCFS with a bounded reorder window, starvation cap and
+    refresh (:func:`repro.core.timing.simulate_dram_sched`). This is
+    the first stage whose charged cycles depend on service *order*, not
+    just stream contents — the golden-trace + property harness in
+    ``tests/core/test_dram_sched.py`` / ``test_golden_pipeline.py``
+    locks it down."""
 
     name: str = dataclasses.field(default="dram_service", init=False)
 
     def run(self, stream: RequestStream, ctx: PipelineContext):
+        sched = ctx.dram_sched
+        # The default config degenerates to strict FIFO — skip the
+        # scheduler wrapper entirely (it would recompute turnarounds
+        # and allocate an unread service_order on the hot path; the
+        # results are bit-identical either way, property-tested).
+        if sched is not None and sched.effective_window == 1 \
+                and not sched.t_refi:
+            sched = None
         per_channel: list[SimResult] = []
+        n_ref = 0
         for _k, sel in _per_channel(stream, ctx.num_channels):
-            per_channel.append(simulate_dram_access(
-                stream.local_addr[sel], ctx.timings, rw=stream.rw[sel]))
+            if sched is None:
+                per_channel.append(simulate_dram_access(
+                    stream.local_addr[sel], ctx.timings,
+                    rw=stream.rw[sel]))
+            else:
+                res = simulate_dram_sched(
+                    stream.local_addr[sel], ctx.timings, sched,
+                    rw=stream.rw[sel])
+                n_ref += res.n_refreshes
+                per_channel.append(res)
         makespan = max((r.total_fpga_cycles for r in per_channel),
                        default=0.0)
         ctx.dram_makespan = makespan
         busy = float(sum(r.total_fpga_cycles for r in per_channel))
+        info = {"per_channel": per_channel, "busy_fpga_cycles": busy,
+                "occupancy_per_channel": [r.total_fpga_cycles
+                                          for r in per_channel]}
+        if sched is not None:
+            info.update(sched_policy=sched.policy,
+                        reorder_window=sched.effective_window,
+                        n_refreshes=n_ref)
         return stream, StageStats(
-            self.name, makespan, len(stream), len(stream),
-            {"per_channel": per_channel, "busy_fpga_cycles": busy,
-             "occupancy_per_channel": [r.total_fpga_cycles
-                                       for r in per_channel]})
+            self.name, makespan, len(stream), len(stream), info)
 
 
 @dataclasses.dataclass

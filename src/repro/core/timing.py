@@ -22,7 +22,8 @@ import math
 
 import numpy as np
 
-from repro.core.config import MemoryControllerConfig, scheduler_sort_stages
+from repro.core.config import (DRAMSchedConfig, MemoryControllerConfig,
+                               scheduler_sort_stages)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -423,6 +424,196 @@ def simulate_dram_access_windowed(
     return SimResult(total_fpga_cycles=dram_cycles * timings.clock_ratio,
                      row_hits=n_hit, row_conflicts=n_conflict,
                      first_accesses=n_first)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-order DRAM command scheduling (FR-FCFS + refresh)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SchedSimResult(SimResult):
+    """:class:`SimResult` extended with command-scheduler observability.
+
+    ``service_order`` is the permutation actually issued (request index
+    per service slot) — the first modeled quantity in this repo where
+    the makespan depends on *order*, not just stream contents; the
+    property tests compute per-request slip from it. Turnaround and
+    refresh cycles are broken out (DRAM command clocks) so tests can
+    check the open-row class costs independently of the bus-direction
+    and refresh terms.
+    """
+
+    n_refreshes: int = 0
+    refresh_dram_cycles: int = 0
+    turnaround_dram_cycles: int = 0
+    service_order: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
+
+
+def _sched_result(n_first, n_hit, n_conflict, n, turn, n_ref, t_rfc,
+                  timings, order) -> SchedSimResult:
+    dram_cycles = (
+        n_first * (timings.t_rcd + timings.t_cl)
+        + n_hit * timings.t_cl
+        + n_conflict * (timings.t_rp + timings.t_rcd + timings.t_cl)
+        + n * timings.t_burst + turn + n_ref * t_rfc)
+    return SchedSimResult(
+        total_fpga_cycles=dram_cycles * timings.clock_ratio,
+        row_hits=n_hit, row_conflicts=n_conflict, first_accesses=n_first,
+        n_refreshes=n_ref, refresh_dram_cycles=n_ref * t_rfc,
+        turnaround_dram_cycles=turn,
+        service_order=np.asarray(order, dtype=np.int64))
+
+
+def simulate_dram_sched_seq(
+    addrs: np.ndarray,
+    timings: DRAMTimings = DDR4_2400,
+    sched: DRAMSchedConfig = DRAMSchedConfig(),
+    rw: np.ndarray | None = None,
+) -> SchedSimResult:
+    """Request-at-a-time oracle for the out-of-order DRAM command
+    scheduler — THE specification the vectorized path
+    (:func:`simulate_dram_sched`) is property-tested bit-identical
+    against.
+
+    One service slot per iteration over a ``reorder_window``-deep
+    pending queue:
+
+    * fill the queue from the trace (arrival order);
+    * refresh: whenever the accumulated service time crosses the next
+      ``t_refi`` boundary the channel stalls ``t_rfc`` cycles and every
+      bank precharges (open rows close — the re-activation after a
+      refresh is charged like a first access: ``t_rcd + t_cl``, no
+      precharge needed);
+    * pick: ``fifo`` (or window 1) always issues the oldest;
+      ``frfcfs`` issues the oldest pending request whose row is already
+      open, else the oldest overall; ``frfcfs_cap`` first checks for a
+      starved request (``bypass >= starvation_cap`` where ``bypass``
+      counts younger requests issued past it while it waited) and
+      forces the oldest such one;
+    * service: classify against per-bank open-row state, charge the
+      class cost + burst (+ tWTR/tRTW against the *issued* direction
+      sequence, which the reorder can change).
+
+    With ``window=1`` and refresh disabled this degenerates exactly to
+    the per-bank FIFO classification of :func:`simulate_dram_access`
+    (bit-identical, including turnarounds).
+    """
+    addrs = np.asarray(addrs, dtype=np.int64).ravel()
+    n = addrs.size
+    if n == 0:
+        return _sched_result(0, 0, 0, 0, 0, 0, sched.t_rfc, timings, [])
+    rows = timings.row_of(addrs)
+    banks = timings.bank_of(addrs)
+    rw_arr = None if rw is None else np.asarray(rw, np.int32).ravel()
+    w = sched.effective_window
+    use_cap = sched.policy == "frfcfs_cap"
+    t_refi = sched.t_refi
+
+    open_row: dict[int, int] = {}
+    pending: list[int] = []
+    bypass: dict[int, int] = {}
+    nxt = 0
+    cycle = 0                       # DRAM clocks serviced so far
+    next_ref = t_refi
+    n_hit = n_conflict = n_first = n_ref = turn = 0
+    last_dir = -1
+    order: list[int] = []
+    while nxt < n or pending:
+        while nxt < n and len(pending) < w:
+            pending.append(nxt)
+            bypass[nxt] = 0
+            nxt += 1
+        if t_refi:
+            while cycle >= next_ref:
+                cycle += sched.t_rfc
+                n_ref += 1
+                open_row.clear()
+                next_ref += t_refi
+        pick = 0
+        if w > 1:
+            forced = None
+            if use_cap:
+                for i, j in enumerate(pending):
+                    if bypass[j] >= sched.starvation_cap:
+                        forced = i
+                        break
+            if forced is not None:
+                pick = forced
+            else:
+                for i, j in enumerate(pending):
+                    b = int(banks[j])
+                    if b in open_row and open_row[b] == rows[j]:
+                        pick = i
+                        break
+        idx = pending.pop(pick)
+        del bypass[idx]
+        b, r = int(banks[idx]), int(rows[idx])
+        if b not in open_row:
+            n_first += 1
+            cost = timings.t_rcd + timings.t_cl
+        elif open_row[b] == r:
+            n_hit += 1
+            cost = timings.t_cl
+        else:
+            n_conflict += 1
+            cost = timings.t_rp + timings.t_rcd + timings.t_cl
+        open_row[b] = r
+        cost += timings.t_burst
+        if rw_arr is not None:
+            d = int(rw_arr[idx])
+            if last_dir == 1 and d == 0:
+                turn += timings.t_wtr
+                cost += timings.t_wtr
+            elif last_dir == 0 and d == 1:
+                turn += timings.t_rtw
+                cost += timings.t_rtw
+            last_dir = d
+        cycle += cost
+        for j in pending:
+            if j < idx:
+                bypass[j] += 1
+        order.append(idx)
+    return _sched_result(n_first, n_hit, n_conflict, n, turn, n_ref,
+                         sched.t_rfc, timings, order)
+
+
+def simulate_dram_sched(
+    addrs: np.ndarray,
+    timings: DRAMTimings = DDR4_2400,
+    sched: DRAMSchedConfig = DRAMSchedConfig(),
+    rw: np.ndarray | None = None,
+    engine: str = "auto",
+) -> SchedSimResult:
+    """Out-of-order DRAM command scheduling — vectorized, bit-identical
+    to :func:`simulate_dram_sched_seq`.
+
+    Dispatch: ``fifo``/window-1 configs without refresh are exactly the
+    one-pass per-bank classification of :func:`simulate_dram_access`
+    (today's FIFO model — the degeneracy the golden tests pin down);
+    everything else runs the chunked event walk in
+    ``repro.core.trace_engine`` (hit runs at array speed, one python
+    event per serviced miss / refresh / forced starvation pick).
+    """
+    if engine not in ("auto", "fast", "sequential"):
+        raise ValueError(f"engine={engine!r} must be auto|fast|sequential")
+    if engine == "sequential":
+        return simulate_dram_sched_seq(addrs, timings, sched, rw)
+    addrs = np.asarray(addrs, dtype=np.int64).ravel()
+    n = addrs.size
+    if n == 0:
+        return _sched_result(0, 0, 0, 0, 0, 0, sched.t_rfc, timings, [])
+    if sched.effective_window == 1 and not sched.t_refi:
+        base = simulate_dram_access(addrs, timings, rw=rw)
+        turn = 0 if rw is None else turnaround_cycles(rw, timings)
+        return SchedSimResult(
+            total_fpga_cycles=base.total_fpga_cycles,
+            row_hits=base.row_hits, row_conflicts=base.row_conflicts,
+            first_accesses=base.first_accesses,
+            turnaround_dram_cycles=turn,
+            service_order=np.arange(n, dtype=np.int64))
+    from repro.core import trace_engine
+    return trace_engine.simulate_dram_sched_fast(addrs, timings, sched, rw)
 
 
 def modeled_bandwidth_gbps(

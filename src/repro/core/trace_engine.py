@@ -578,3 +578,310 @@ def auto_parallel_ok(state, line_ids, *, rw=None, write_lines=None,
                             or int(virt_lines.max()) >= table.shape[0]):
         return False
     return _clean_ways_coherent(state, table)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-order DRAM command scheduling — the chunked fast path
+# ---------------------------------------------------------------------------
+
+def simulate_dram_sched_fast(addrs, timings, sched, rw=None):
+    """Fast path of :func:`repro.core.timing.simulate_dram_sched` —
+    bit-identical to ``simulate_dram_sched_seq`` (property-tested over
+    policy x window x cap x refresh x rw x timings).
+
+    The oracle's window walk has one exploitable invariant, the same one
+    the windowed baseline simulator uses: **open-row state changes only
+    when a miss is serviced**. Between miss services, FR-FCFS issues the
+    pending row-hits oldest-first — which is exactly the frontier scan
+    order — so the walk alternates between
+
+    * a **vectorized scan run**: classify a chunk of the frontier
+      against current bank state, issue every hit in one array op and
+      defer the misses, with the run truncated by whichever binds
+      first — the window filling with misses (the ``room``-th miss),
+      the starvation budget of the oldest pending miss (``frfcfs_cap``),
+      or the service time crossing the next refresh boundary; and
+    * a **scalar event**: issue the oldest deferred miss (window full /
+      trace exhausted / starvation-forced), drain the deferred requests
+      its newly opened row converts into hits, or refresh (stall
+      ``t_rfc``, precharge every bank).
+
+    Row-hit runs stream at array speed; python touches one request per
+    serviced miss, forced pick, or refresh.
+    """
+    from repro.core.timing import _sched_result
+
+    addrs = np.asarray(addrs, dtype=np.int64).ravel()
+    n = addrs.size
+    if n == 0:
+        return _sched_result(0, 0, 0, 0, 0, 0, sched.t_rfc, timings, [])
+    rows = timings.row_of(addrs)
+    banks = timings.bank_of(addrs)
+    rw_arr = None if rw is None else np.asarray(rw, np.int32).ravel()
+    w = sched.effective_window
+    use_cap = sched.policy == "frfcfs_cap"
+    cap = sched.starvation_cap
+    t_refi, t_rfc = sched.t_refi, sched.t_rfc
+    t_wtr, t_rtw = timings.t_wtr, timings.t_rtw
+    cost_hit = timings.t_cl + timings.t_burst
+    cost_first = timings.t_rcd + timings.t_cl + timings.t_burst
+    cost_conf = (timings.t_rp + timings.t_rcd + timings.t_cl
+                 + timings.t_burst)
+
+    open_arr = np.zeros(timings.num_banks, np.int64)
+    opened = np.zeros(timings.num_banks, bool)
+    # python mirrors of the per-request decode and bank state: the
+    # miss-heavy regime steps request-at-a-time below, and list reads
+    # are ~10x cheaper than numpy scalar indexing there
+    banks_l = banks.tolist()
+    rows_l = rows.tolist()
+    rw_l = None if rw_arr is None else rw_arr.tolist()
+    open_l = [0] * timings.num_banks
+    opened_l = [False] * timings.num_banks
+    deferred: list[int] = []    # scanned misses, arrival order
+    byp: list[int] = []         # younger issues past each, parallel list
+    out = np.empty(n, np.int64)
+    out_n = 0
+    f = 0
+    cycle = 0
+    next_ref = t_refi
+    n_hit = n_conflict = n_first = n_ref = turn = 0
+    last_dir = -1
+    grow = max(64, 4 * w)     # scan chunk; doubles through long hit runs
+    MICRO = 96                # python-step budget in the miss-heavy mode
+
+    def serve_scalar(idx: int) -> None:
+        nonlocal n_hit, n_conflict, n_first, cycle, turn, last_dir, out_n
+        b, r = banks_l[idx], rows_l[idx]
+        if not opened_l[b]:
+            n_first += 1
+            c = cost_first
+        elif open_l[b] == r:
+            n_hit += 1
+            c = cost_hit
+        else:
+            n_conflict += 1
+            c = cost_conf
+        opened_l[b] = True
+        open_l[b] = r
+        opened[b] = True
+        open_arr[b] = r
+        if rw_l is not None:
+            d = rw_l[idx]
+            if last_dir == 1 and d == 0:
+                turn += t_wtr
+                c += t_wtr
+            elif last_dir == 0 and d == 1:
+                turn += t_rtw
+                c += t_rtw
+            last_dir = d
+        cycle += c
+        out[out_n] = idx
+        out_n += 1
+
+    while f < n or deferred:
+        if t_refi:
+            while cycle >= next_ref:      # refresh precedes the issue
+                cycle += t_rfc
+                n_ref += 1
+                opened[:] = False
+                opened_l = [False] * timings.num_banks
+                next_ref += t_refi
+        if deferred and (len(deferred) >= w or f >= n
+                         or (use_cap and byp[0] >= cap)):
+            # -- event: issue the oldest pending miss, then drain the
+            # deferred requests its open row converts into hits
+            # (oldest-hit-first, interrupted by starvation forcing or a
+            # refresh boundary exactly as the oracle's pick rule is)
+            serve_scalar(deferred.pop(0))
+            if use_cap:
+                byp.pop(0)
+                # scalar drain: starvation forcing can interleave state
+                # changes (forced conflicts open new rows mid-drain)
+                while deferred:
+                    if t_refi and cycle >= next_ref:
+                        break              # refresh re-evaluates state
+                    if byp[0] >= cap:
+                        i = 0              # oldest starved (byp sorted)
+                    else:
+                        d_arr = np.asarray(deferred, np.int64)
+                        db = banks[d_arr]
+                        cand = np.flatnonzero(
+                            opened[db] & (open_arr[db] == rows[d_arr]))
+                        if cand.size == 0:
+                            break
+                        i = int(cand[0])
+                    serve_scalar(deferred.pop(i))
+                    byp.pop(i)
+                    for kk in range(i):    # older entries were bypassed
+                        byp[kk] += 1
+            elif deferred and len(deferred) <= 48:
+                # hits never change state, so one pass over the (small)
+                # window drains every conversion in age order
+                cand_pos = [kk for kk, dd in enumerate(deferred)
+                            if opened_l[banks_l[dd]]
+                            and open_l[banks_l[dd]] == rows_l[dd]]
+                if cand_pos:
+                    served: list[int] = []
+                    for kk in cand_pos:
+                        if t_refi and cycle >= next_ref:
+                            break
+                        serve_scalar(deferred[kk])
+                        served.append(kk)
+                    if served:
+                        drop = set(served)
+                        deferred = [dd for kk, dd in enumerate(deferred)
+                                    if kk not in drop]
+            elif deferred:
+                # same drain, vectorized for deep windows, cut only by
+                # the refresh boundary
+                d_arr = np.asarray(deferred, np.int64)
+                db = banks[d_arr]
+                cand = np.flatnonzero(
+                    opened[db] & (open_arr[db] == rows[d_arr]))
+                if cand.size:
+                    idxs = d_arr[cand]
+                    tcosts = None
+                    if rw_arr is not None:
+                        dirs = rw_arr[idxs]
+                        prev = np.concatenate(([last_dir], dirs[:-1]))
+                        tcosts = np.where(
+                            (prev == 1) & (dirs == 0), t_wtr,
+                            np.where((prev == 0) & (dirs == 1),
+                                     t_rtw, 0)).astype(np.int64)
+                    j = cand.size
+                    if t_refi:
+                        costs = (np.full(j, cost_hit, np.int64)
+                                 if tcosts is None else cost_hit + tcosts)
+                        pre = cycle + np.concatenate(
+                            ([0], np.cumsum(costs[:-1])))
+                        cross = np.flatnonzero(pre >= next_ref)
+                        if cross.size:
+                            j = int(cross[0])
+                    if j:
+                        n_hit += j
+                        if tcosts is None:
+                            cycle += j * cost_hit
+                        else:
+                            tsum = int(tcosts[:j].sum())
+                            turn += tsum
+                            cycle += j * cost_hit + tsum
+                            last_dir = int(rw_arr[idxs[j - 1]])
+                        out[out_n:out_n + j] = idxs[:j]
+                        out_n += j
+                        keep = np.ones(d_arr.size, bool)
+                        keep[cand[:j]] = False
+                        deferred = [d for d, m in zip(deferred, keep)
+                                    if m]
+            continue
+        if f >= n:
+            break
+        if grow <= 32:
+            # -- miss-heavy regime: python-step the frontier (the numpy
+            # chunk overhead dwarfs its win on short hit runs). Exact
+            # same semantics as the chunked scan below: serve hits in
+            # arrival order, defer misses, stop on window-full /
+            # starvation budget / refresh boundary / step budget.
+            steps = 0
+            while f < n and len(deferred) < w and steps < MICRO:
+                if t_refi and cycle >= next_ref:
+                    break
+                if use_cap and byp and byp[0] >= cap:
+                    break
+                b, r = banks_l[f], rows_l[f]
+                if opened_l[b] and open_l[b] == r:
+                    c = cost_hit
+                    if rw_l is not None:
+                        d = rw_l[f]
+                        if last_dir == 1 and d == 0:
+                            turn += t_wtr
+                            c += t_wtr
+                        elif last_dir == 0 and d == 1:
+                            turn += t_rtw
+                            c += t_rtw
+                        last_dir = d
+                    n_hit += 1
+                    cycle += c
+                    out[out_n] = f
+                    out_n += 1
+                    if use_cap and byp:
+                        byp = [x + 1 for x in byp]
+                else:
+                    deferred.append(f)
+                    if use_cap:
+                        byp.append(0)
+                f += 1
+                steps += 1
+            if steps >= MICRO and len(deferred) < w:
+                grow = 64          # long run — try the chunked scan
+            continue
+        # -- scan run: issue frontier hits, defer misses --------------
+        room = w - len(deferred)
+        chunk = min(max(32, 4 * room, grow), n - f)
+        sl = slice(f, f + chunk)
+        hm = opened[banks[sl]] & (open_arr[banks[sl]] == rows[sl])
+        miss_rel = np.flatnonzero(~hm)
+        if miss_rel.size >= room:
+            take = int(miss_rel[room - 1]) + 1   # through the room-th miss
+            miss_rel = miss_rel[:room]
+        else:
+            take = chunk
+        hit_rel = np.flatnonzero(hm[:take])
+        if use_cap and hit_rel.size:
+            if deferred:
+                # every hit here is younger than the oldest pending miss
+                budget = cap - byp[0]            # >= 1: event checked above
+                if hit_rel.size > budget:
+                    take = int(hit_rel[budget])
+                    hit_rel = hit_rel[:budget]
+                    miss_rel = miss_rel[miss_rel < take]
+            elif miss_rel.size:
+                # only hits *after* the first new miss bypass it
+                after = hit_rel[hit_rel > miss_rel[0]]
+                if after.size > cap:
+                    take = int(after[cap])
+                    hit_rel = hit_rel[hit_rel < take]
+                    miss_rel = miss_rel[miss_rel < take]
+        tcosts = None
+        if rw_arr is not None and hit_rel.size:
+            dirs = rw_arr[f + hit_rel]
+            prev = np.concatenate(([last_dir], dirs[:-1]))
+            tcosts = np.where((prev == 1) & (dirs == 0), t_wtr,
+                              np.where((prev == 0) & (dirs == 1),
+                                       t_rtw, 0)).astype(np.int64)
+        if t_refi and hit_rel.size:
+            costs = (np.full(hit_rel.size, cost_hit, np.int64)
+                     if tcosts is None else cost_hit + tcosts)
+            pre = cycle + np.concatenate(([0], np.cumsum(costs[:-1])))
+            cross = np.flatnonzero(pre >= next_ref)
+            if cross.size:                       # cross[0] >= 1: see top
+                kcut = int(cross[0])
+                take = int(hit_rel[kcut])
+                hit_rel = hit_rel[:kcut]
+                miss_rel = miss_rel[miss_rel < take]
+                if tcosts is not None:
+                    tcosts = tcosts[:kcut]
+        k = hit_rel.size
+        if k:
+            n_hit += k
+            if tcosts is None:
+                cycle += k * cost_hit
+            else:
+                tsum = int(tcosts.sum())
+                turn += tsum
+                cycle += k * cost_hit + tsum
+                last_dir = int(rw_arr[f + hit_rel[-1]])
+            out[out_n:out_n + k] = f + hit_rel
+            out_n += k
+        if use_cap:
+            if k and byp:
+                byp = [b + k for b in byp]
+            if miss_rel.size:
+                new_byp = k - np.searchsorted(hit_rel, miss_rel)
+                byp.extend(int(b) for b in new_byp)
+        if miss_rel.size:
+            deferred.extend(int(m) for m in (f + miss_rel))
+        f += take
+        grow = chunk * 2 if take == chunk else 32
+    return _sched_result(n_first, n_hit, n_conflict, n, turn, n_ref,
+                         t_rfc, timings, out)

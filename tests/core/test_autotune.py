@@ -65,7 +65,8 @@ def test_tune_exercises_channel_and_mapping_axes(trace):
     # score every policy
     assert sum("mem_ch=1" in d for d in descs) == 1
     assert sum("mem_ch=2" in d for d in descs) == 3
-    assert {d.split("map=")[1] for d in descs if "mem_ch=2" in d} == \
+    assert {d.split("map=")[1].split()[0] for d in descs
+            if "mem_ch=2" in d} == \
         {"row_interleave", "block_interleave", "xor"}
 
 
@@ -80,3 +81,36 @@ def test_tune_channel_axis_respects_vmem_budget(trace):
                num_channels=(1, 8))
     assert res.config.vmem_footprint_bytes() <= budget
     assert all("mem_ch=8" not in d for d, _ in res.table)
+
+
+def test_tune_exercises_dram_sched_axes(trace):
+    """dram_sched_policies x reorder_windows join the grid; the
+    FIFO/window-1 collapse is deduplicated (fifo is scored once, not
+    once per window), and the winner carries a config from the grid."""
+    res = tune(trace, 512, batch_sizes=(64,), associativities=(4,),
+               num_lines=(4096,), dma_channels=(4,),
+               dram_sched_policies=("fifo", "frfcfs"),
+               reorder_windows=(1, 8, 32))
+    descs = [d for d, _ in res.table]
+    assert sum("dsched=fifo:1" in d for d in descs) == 1
+    assert sum("dsched=frfcfs:8" in d for d in descs) == 1
+    assert sum("dsched=frfcfs:32" in d for d in descs) == 1
+    assert len(descs) == 3
+    assert res.config.dram_sched.policy in ("fifo", "frfcfs")
+    assert res.config.dram_sched.reorder_window in (1, 8, 32)
+    # on a zipf-hot trace with the cache absorbing the head, deeper
+    # reorder windows can only help the modeled DRAM service — the
+    # frfcfs candidates must not lose to fifo
+    best_fr = min(c for d, c in res.table if "frfcfs" in d)
+    fifo_c = next(c for d, c in res.table if "dsched=fifo:1" in d)
+    assert best_fr <= fifo_c
+
+
+def test_tune_default_grid_unchanged(trace):
+    """The default axes keep the pre-PR search space: every candidate
+    is scored with the FIFO window-1 service model."""
+    res = tune(trace, 512, batch_sizes=(16,), associativities=(4,),
+               num_lines=(1024,), dma_channels=(1,))
+    assert all("dsched=fifo:1" in d for d, _ in res.table)
+    assert res.config.dram_sched == \
+        MemoryControllerConfig().dram_sched

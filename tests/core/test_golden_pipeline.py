@@ -1,0 +1,76 @@
+"""Golden-trace regression suite: the full ``PipelineResult`` breakdown
+of every pinned configuration (paper Table IV, the combined config, and
+the PR-5 FR-FCFS service models) on fixed seeded traces must reproduce
+the checked-in snapshots in ``tests/goldens/`` exactly.
+
+A failure here means the *modeled numbers changed*. If the change is
+intentional, regenerate with
+
+    PYTHONPATH=src:tests/core python scripts/regen_goldens.py
+
+and review the JSON diff — it is the machine-readable record of what
+the model change did to every pinned configuration. The case
+definitions are shared with the regenerator via
+``tests/core/golden_cases.py``.
+"""
+
+import json
+import os
+
+import pytest
+
+from golden_cases import CASES, GOLDEN_DIR, golden_record
+
+_REGEN = ("snapshot mismatch for {name!r} at key {key!r}:\n"
+          "  golden:   {want!r}\n"
+          "  computed: {got!r}\n"
+          "If this model change is intentional, run\n"
+          "  PYTHONPATH=src:tests/core python scripts/regen_goldens.py\n"
+          "and commit the reviewed JSON diff.")
+
+
+def _load(name: str) -> dict:
+    path = os.path.join(GOLDEN_DIR, f"{name}.json")
+    assert os.path.exists(path), (
+        f"missing golden {path} — run scripts/regen_goldens.py")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_snapshot(name):
+    golden = _load(name)
+    got = golden_record(name)
+    assert sorted(golden) == sorted(got), (
+        f"golden {name} schema drift — regenerate goldens")
+    for key in sorted(golden):
+        assert golden[key] == got[key], _REGEN.format(
+            name=name, key=key, want=golden[key], got=got[key])
+
+
+def test_goldens_have_no_strays():
+    """Every checked-in golden corresponds to a defined case (stale
+    files would silently stop being checked)."""
+    on_disk = {f[:-5] for f in os.listdir(GOLDEN_DIR)
+               if f.endswith(".json")}
+    assert on_disk == set(CASES)
+
+
+def test_golden_frfcfs_beats_fifo_on_record():
+    """The pinned snapshots themselves witness the PR-5 acceptance
+    criterion: the bare FR-FCFS window-32 service beats the FIFO DRAM
+    service of the same engines-off controller on the GCN trace."""
+    frfcfs = _load("frfcfs_bare_gcn")
+    # paper_eval runs the batch scheduler; the honest FIFO reference for
+    # the bare config is recomputed (cheap) rather than pinned twice
+    import dataclasses
+
+    import golden_cases
+    fifo_cfg, trace, _ = golden_cases.CASES["frfcfs_bare_gcn"]
+    fifo_cfg = dataclasses.replace(
+        fifo_cfg, dram_sched=golden_cases.DRAMSchedConfig())
+    rows, rw = trace()
+    from repro.core.controller import MemoryController
+    fifo = MemoryController(fifo_cfg).simulate(
+        None, rows, rw, golden_cases.ROW_BYTES)
+    assert frfcfs["makespan_fpga_cycles"] < fifo.makespan_fpga_cycles

@@ -384,3 +384,131 @@ def test_combined_cache_channels_beats_scheduler_only(rng):
     assert a.makespan_fpga_cycles < b.makespan_fpga_cycles
     # the cache filter genuinely shrank the DRAM stream
     assert a.dram_makespan_fpga_cycles < b.dram_makespan_fpga_cycles
+
+
+# ---------------------------------------------------------------------------
+# RequestStream.select / _concat_streams round-trips (direct coverage —
+# previously exercised only through full pipeline runs)
+# ---------------------------------------------------------------------------
+
+def _full_stream(rng, n=257):
+    s = RequestStream.from_rows(
+        rng.integers(0, 5000, n), rng.integers(0, 2, n),
+        row_bytes=512, pe_id=rng.integers(0, 8, n))
+    amap = AddressMap(ChannelConfig(num_channels=4), DDR4_2400)
+    s.channel = amap.channel_of(s.addr)
+    s.local_addr = amap.local_addr(s.addr)
+    s.tags["writeback"] = rng.random(n) < 0.25
+    return s
+
+
+def _assert_streams_equal(a, b):
+    np.testing.assert_array_equal(a.addr, b.addr)
+    np.testing.assert_array_equal(a.rw, b.rw)
+    np.testing.assert_array_equal(a.pe_id, b.pe_id)
+    np.testing.assert_array_equal(a.seq, b.seq)
+    np.testing.assert_array_equal(a.channel, b.channel)
+    np.testing.assert_array_equal(a.local_addr, b.local_addr)
+    assert sorted(a.tags) == sorted(b.tags)
+    for k in a.tags:
+        np.testing.assert_array_equal(a.tags[k], b.tags[k])
+
+
+def test_select_permutation_round_trip(rng):
+    """select(perm) then select(inverse) restores every array,
+    annotations and tags included."""
+    s = _full_stream(rng)
+    perm = rng.permutation(len(s))
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(s))
+    _assert_streams_equal(s.select(perm).select(inv), s)
+    # sub-selection keeps the tag rows aligned with the requests
+    sel = np.flatnonzero(s.rw == 1)
+    sub = s.select(sel)
+    assert len(sub) == sel.size
+    np.testing.assert_array_equal(sub.tags["writeback"],
+                                  s.tags["writeback"][sel])
+
+
+def test_select_without_annotations_keeps_none(rng):
+    s = RequestStream.from_rows(rng.integers(0, 100, 16), row_bytes=64)
+    sub = s.select(np.arange(8))
+    assert sub.channel is None and sub.local_addr is None
+
+
+def test_concat_streams_split_round_trip(rng):
+    """Splitting a stream into chunks and concatenating restores it —
+    the invariant the CacheFilter's per-channel merge relies on."""
+    from repro.core.pipeline import _concat_streams
+    s = _full_stream(rng)
+    cuts = [0, 40, 41, 150, len(s)]
+    parts = [s.select(np.arange(a, b)) for a, b in zip(cuts, cuts[1:])]
+    _assert_streams_equal(_concat_streams(parts), s)
+
+
+def test_concat_streams_mixed_annotations_and_tags(rng):
+    """A part without annotations poisons the concat to None (a later
+    AddressMap run re-annotates); missing tags raise rather than
+    silently misalign."""
+    from repro.core.pipeline import _concat_streams
+    s = _full_stream(rng, n=64)
+    bare = RequestStream.from_rows(rng.integers(0, 100, 8),
+                                   row_bytes=512)
+    bare.tags["writeback"] = np.zeros(8, bool)
+    merged = _concat_streams([s, bare])
+    assert merged.channel is None and merged.local_addr is None
+    assert len(merged) == len(s) + 8
+    no_tag = RequestStream.from_rows(rng.integers(0, 100, 8),
+                                     row_bytes=512)
+    with pytest.raises(KeyError):
+        _concat_streams([s, no_tag])
+
+
+def test_concat_streams_empty_list():
+    from repro.core.pipeline import _concat_streams
+    out = _concat_streams([])
+    assert len(out) == 0 and out.tags == {}
+
+
+# ---------------------------------------------------------------------------
+# PipelineResult legacy-view adapters (direct coverage)
+# ---------------------------------------------------------------------------
+
+def test_as_channel_result_and_as_sim_result_fields(rng):
+    """The adapters reproduce the DRAM-service + arbitration view:
+    makespan = slowest channel + arbiter fill, counts aggregate over
+    channels, and the SimResult view collapses the same numbers."""
+    cfg = MemoryControllerConfig(
+        channels=ChannelConfig(num_channels=4))
+    mc = MemoryController(cfg)
+    rows = rng.integers(0, 4096, 4000)
+    rw = rng.integers(0, 2, 4000)
+    pe = rng.integers(0, cfg.num_pes, 4000)
+    res = mc.simulate(pe, rows, rw, 512)
+    ch = res.as_channel_result()
+    assert ch.arbitration_cycles == res.arbitration_cycles
+    assert ch.per_channel == res.per_channel
+    assert ch.requests_per_channel == res.requests_per_channel
+    assert ch.makespan_fpga_cycles == pytest.approx(
+        max(r.total_fpga_cycles for r in res.per_channel)
+        + res.arbitration_cycles)
+    assert ch.busy_fpga_cycles == pytest.approx(
+        sum(r.total_fpga_cycles for r in res.per_channel))
+    assert ch.port_stats is res.port_stats
+    assert ch.row_hits == sum(r.row_hits for r in res.per_channel)
+    sim = res.as_sim_result()
+    assert sim.total_fpga_cycles == ch.makespan_fpga_cycles
+    assert (sim.row_hits, sim.row_conflicts, sim.first_accesses) == \
+        (ch.row_hits, ch.row_conflicts, ch.first_accesses)
+    assert sim.hit_rate == pytest.approx(ch.hit_rate)
+
+
+def test_adapters_on_empty_pipeline():
+    mc = MemoryController(MemoryControllerConfig(
+        channels=ChannelConfig(num_channels=2)))
+    res = mc.simulate(None, np.empty(0, np.int64), None, 512)
+    ch = res.as_channel_result()
+    assert ch.makespan_fpga_cycles == 0.0
+    assert ch.requests_per_channel == [0, 0]
+    sim = res.as_sim_result()
+    assert (sim.total_fpga_cycles, sim.row_hits) == (0.0, 0)
