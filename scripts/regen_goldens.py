@@ -19,12 +19,13 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
                                 "tests", "core"))
 
-from golden_cases import CASES, GOLDEN_DIR, golden_record  # noqa: E402
+from golden_cases import (CASES, GOLDEN_DIR, SERVING_CASES,  # noqa: E402
+                          golden_record)
 
 
 def main() -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
-    for name in CASES:
+    for name in list(CASES) + list(SERVING_CASES):
         path = os.path.join(GOLDEN_DIR, f"{name}.json")
         record = golden_record(name)
         with open(path, "w") as f:

@@ -141,3 +141,109 @@ def tune(
         raise ValueError("no feasible configuration under the VMEM budget")
     return TuneResult(config=best_cfg, modeled_cycles=best_cycles,
                       candidates_evaluated=n_eval, table=table)
+
+
+# ---------------------------------------------------------------------------
+# SLO-constrained serving objective (open-loop, ARCHITECTURE §9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServingTuneResult:
+    config: MemoryControllerConfig
+    arb_policy: str
+    weights: tuple | None
+    slo_p99_cycles: float        # achieved p99 of the SLO port
+    makespan_cycles: float
+    feasible: bool               # met the SLO target (if one was given)
+    candidates_evaluated: int
+    table: list                  # (summary, slo_p99, makespan) per candidate
+
+
+def _score_serving(cfg, row_ids, rw, pe_id, arrival, row_bytes, *,
+                   num_ports, policy, weights, timings):
+    """One serving candidate: open-loop pipeline, per-port sojourns."""
+    stream = RequestStream.from_rows(row_ids, rw, row_bytes=row_bytes,
+                                     pe_id=pe_id, arrival_cycle=arrival)
+    ctx = PipelineContext.from_config(cfg, timings)
+    ctx.scheduler = None
+    ctx.open_loop = True
+    stages = default_stages(ctx, ports=num_ports, arbiter_policy=policy,
+                            weights=weights, cache=False)
+    return run_pipeline(stream, ctx, stages)
+
+
+def tune_serving(
+    row_ids: np.ndarray,
+    rw: np.ndarray | None,
+    pe_id: np.ndarray,
+    arrival_cycle: np.ndarray,
+    row_bytes: int,
+    *,
+    num_ports: int,
+    slo_port: int = 0,
+    slo_p99_cycles: float | None = None,
+    arb_policies: Sequence[str] = ("round_robin", "priority", "weighted"),
+    weight_ratios: Sequence[int] = (2, 4, 8),
+    dram_sched_policies: Sequence[str] = ("frfcfs", "frfcfs_cap"),
+    reorder_windows: Sequence[int] = (16, 32),
+    starvation_caps: Sequence[int] = (8, 16),
+    timings: DRAMTimings = DDR4_2400,
+) -> ServingTuneResult:
+    """Tune the QoS knobs for an open-loop multi-tenant trace.
+
+    The objective is *constrained*: among candidates whose SLO port
+    (``slo_port``) meets ``slo_p99_cycles`` p99 sojourn, pick the one
+    with the best overall makespan (throughput); if none meets it — or
+    no target is given — fall back to minimizing the SLO port's p99
+    outright. ``weighted`` candidates favor the SLO port by each ratio
+    in ``weight_ratios`` (other ports weight 1); ``frfcfs_cap``
+    candidates sweep the starvation cap, the knob that bounds how long
+    a reorder window may defer the SLO tenant's misses.
+    """
+    row_ids = np.asarray(row_ids)
+    arb_grid: list[tuple[str, tuple | None]] = []
+    for pol in arb_policies:
+        if pol == "weighted":
+            for ratio in weight_ratios:
+                w = [1] * num_ports
+                w[slo_port] = int(ratio)
+                arb_grid.append((pol, tuple(w)))
+        else:
+            arb_grid.append((pol, None))
+    sched_grid = sorted({
+        (pol, win, cap if pol == "frfcfs_cap" else 0)
+        for pol in dram_sched_policies for win in reorder_windows
+        for cap in (starvation_caps if pol == "frfcfs_cap" else (0,))})
+
+    best = None          # (feasible, key, result row)
+    table = []
+    n_eval = 0
+    for (apol, w) in arb_grid:
+        for (spol, win, cap) in sched_grid:
+            cfg = MemoryControllerConfig(
+                dram_sched=DRAMSchedConfig(
+                    policy=spol, reorder_window=win,
+                    starvation_cap=cap or 16))
+            res = _score_serving(cfg, row_ids, rw, pe_id, arrival_cycle,
+                                 row_bytes, num_ports=num_ports,
+                                 policy=apol, weights=w, timings=timings)
+            port = res.serving.per_port.get(slo_port)
+            p99 = float(port["p99_sojourn"]) if port else 0.0
+            mk = res.makespan_fpga_cycles
+            n_eval += 1
+            feasible = (slo_p99_cycles is None or p99 <= slo_p99_cycles)
+            table.append((f"arb={apol}{list(w) if w else ''} "
+                          f"dsched={spol}:{win}"
+                          + (f":cap{cap}" if cap else ""), p99, mk))
+            # constrained order: feasible beats infeasible; within
+            # feasible minimize makespan, within infeasible minimize p99
+            key = (0, mk, p99) if feasible else (1, p99, mk)
+            if best is None or key < best[0]:
+                best = (key, cfg, apol, w, p99, mk, feasible)
+    assert best is not None
+    _, cfg, apol, w, p99, mk, feasible = best
+    return ServingTuneResult(
+        config=cfg, arb_policy=apol, weights=w,
+        slo_p99_cycles=p99, makespan_cycles=mk,
+        feasible=feasible and slo_p99_cycles is not None,
+        candidates_evaluated=n_eval, table=table)

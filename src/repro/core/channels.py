@@ -678,3 +678,107 @@ def simulate_multiport_channels(
     return _aggregate(per_channel, counts,
                       float(arbiter_fill_cycles(num_ports)),
                       port_stats=port_stats)
+
+
+# ---------------------------------------------------------------------------
+# Open-loop serving composition (arrival-aware front end)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServingChannelResult(ChannelSimResult):
+    """:class:`ChannelSimResult` plus the per-request latency arrays of
+    an open-loop run — completion stamps aligned to the *input* trace
+    order (arbiter fill included, like the makespan)."""
+
+    completion_fpga_cycles: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float64))
+    service_fpga_cycles: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float64))
+    arrival_fpga_cycles: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float64))
+    idle_fpga_cycles: float = 0.0
+
+    @property
+    def sojourn_fpga_cycles(self) -> np.ndarray:
+        return self.completion_fpga_cycles - self.arrival_fpga_cycles
+
+
+def simulate_serving_channels(
+    addrs: np.ndarray,
+    arrival_fpga: np.ndarray | None = None,
+    rw: np.ndarray | None = None,
+    *,
+    pe_id: np.ndarray | None = None,
+    num_ports: int | None = None,
+    policy: str = "round_robin",
+    weights: Sequence[int] | None = None,
+    timings: DRAMTimings = DDR4_2400,
+    channel_cfg: ChannelConfig = ChannelConfig(),
+    dram_sched: DRAMSchedConfig | None = None,
+    use_seq_oracle: bool = False,
+) -> ServingChannelResult:
+    """Arrival-aware front end: map → per-channel coupled
+    admission+service (:func:`repro.core.timing.simulate_arrivals`) →
+    makespan/latency aggregate.
+
+    Channels stay exactly independent after mapping (each owns its
+    arbiter, reorder window and refresh counter), so the open-loop walk
+    decomposes per channel like every closed-loop composition above.
+    ``use_seq_oracle`` swaps every channel's engine for the
+    request-at-a-time spec ``simulate_arrivals_seq`` — the two are
+    bit-identical (property-tested), and with all-zero arrivals both
+    degenerate to the closed-loop arbiter + scheduler results.
+    """
+    from repro.core.timing import simulate_arrivals
+
+    amap = AddressMap(channel_cfg, timings)
+    addrs = np.asarray(addrs, dtype=np.int64).ravel()
+    n = addrs.shape[0]
+    arr = np.zeros(n, np.float64) if arrival_fpga is None \
+        else np.asarray(arrival_fpga, np.float64).ravel()
+    rw_arr = None if rw is None else np.asarray(rw, np.int32).ravel()
+    pe = None if pe_id is None else np.asarray(pe_id, np.int64).ravel()
+    ch = amap.channel_of(addrs)
+    local = amap.local_addr(addrs)
+    engine = "sequential" if use_seq_oracle else "auto"
+    multi = num_ports is not None and num_ports > 1
+
+    per_channel, counts = [], []
+    completion = np.zeros(n, np.float64)
+    service = np.zeros(n, np.float64)
+    idle = 0.0
+    grants = np.zeros(num_ports or 1, np.int64)
+    stalls = np.zeros(num_ports or 1, np.int64)
+    for k in range(channel_cfg.num_channels):
+        sel = np.flatnonzero(ch == k)       # stable: keeps trace order
+        res = simulate_arrivals(
+            local[sel], timings,
+            dram_sched if dram_sched is not None else DRAMSchedConfig(),
+            rw=None if rw_arr is None else rw_arr[sel],
+            arrival_fpga=arr[sel],
+            pe_id=None if pe is None else pe[sel],
+            num_ports=num_ports, arb_policy=policy, weights=weights,
+            engine=engine)
+        completion[sel] = res.completion_fpga_cycles
+        service[sel] = res.service_dram_cycles * timings.clock_ratio
+        idle += res.idle_dram_cycles * timings.clock_ratio
+        if multi:
+            st = ArbiterStats.from_grant_order(res.granted_port,
+                                               num_ports)
+            grants += st.grants
+            stalls += st.stall_slots
+        per_channel.append(res)
+        counts.append(int(sel.shape[0]))
+    fill = float(arbiter_fill_cycles(num_ports)) if multi else 0.0
+    agg = _aggregate(per_channel, counts, fill,
+                     port_stats=(ArbiterStats(grants=grants,
+                                              stall_slots=stalls,
+                                              fairness=_jain(grants))
+                                 if multi else None))
+    return ServingChannelResult(
+        **dataclasses.asdict(agg) | {"per_channel": per_channel,
+                                     "port_stats": agg.port_stats},
+        completion_fpga_cycles=completion + fill,
+        service_fpga_cycles=service,
+        arrival_fpga_cycles=arr,
+        idle_fpga_cycles=idle)

@@ -256,6 +256,7 @@ class MemoryController:
         self, pe_id, row_ids, rw, row_bytes: int,
         *, arbiter_policy: str = "round_robin", weights=None,
         coalesce_writes: bool = False,
+        arrival_cycle=None, open_loop: bool | None = None,
     ) -> PipelineResult:
         """Full-pipeline simulation of an irregular row trace — the
         paper's headline composition (cache engine *and* batch scheduler
@@ -273,12 +274,36 @@ class MemoryController:
         ARCHITECTURE §8): the default FIFO window-1 model is
         bit-identical to the pre-PR service stage, pinned by the
         golden-trace suite (``tests/core/test_golden_pipeline.py``).
+
+        ``arrival_cycle`` (per-request FPGA-cycle stamps) switches the
+        run to *open-loop serving* (ARCHITECTURE §9): no request is
+        granted or issued before it arrives, per-channel idle gaps
+        advance the clock, and the result's ``.serving`` reports
+        per-request sojourn times with p50/p95/p99 and sustained
+        throughput. Serving runs the drop-free stage subset (no cache
+        filter, no batch scheduler — both retire the per-request
+        identity sojourn accounting needs). With all stamps zero the
+        serving datapath is bit-identical to the closed-loop pipeline
+        (property-tested); ``open_loop`` forces the mode explicitly.
         """
         stream = RequestStream.from_rows(row_ids, rw, row_bytes=row_bytes,
-                                         pe_id=pe_id)
+                                         pe_id=pe_id,
+                                         arrival_cycle=arrival_cycle)
+        ports = self.config.num_pes if pe_id is not None else None
+        serving = open_loop if open_loop is not None else \
+            stream.has_arrivals
+        if serving:
+            ctx = pipeline_mod.PipelineContext.from_config(self.config,
+                                                           self.timings)
+            ctx.scheduler = None
+            ctx.open_loop = True
+            stages = pipeline_mod.default_stages(
+                ctx, ports=ports, arbiter_policy=arbiter_policy,
+                weights=weights, cache=False)
+            return pipeline_mod.run_pipeline(stream, ctx, stages)
         return self._run(
             stream,
-            ports=self.config.num_pes if pe_id is not None else None,
+            ports=ports,
             arbiter_policy=arbiter_policy, weights=weights,
             cache=True, coalesce_writes=coalesce_writes)
 

@@ -79,6 +79,13 @@ class RequestStream:
     ``local_addr`` are AddressMap annotations; ``tags`` holds free-form
     per-request annotations (e.g. ``"writeback"`` marks the synthetic
     victim flushes the CacheFilter inserts).
+
+    ``arrival_cycle`` is the open-loop arrival stamp in FPGA cycles:
+    request i enters its port FIFO at that time and may not be granted
+    or issued earlier. ``None`` (or all zeros) is the closed-loop
+    degenerate case — every request pending from cycle 0 — and the
+    pipeline then reproduces the pre-serving results bit-identically
+    (property-tested).
     """
 
     addr: np.ndarray                      # (N,) int64
@@ -87,10 +94,18 @@ class RequestStream:
     seq: np.ndarray                       # (N,) int64
     channel: np.ndarray | None = None     # (N,) int64 — AddressMap
     local_addr: np.ndarray | None = None  # (N,) int64 — AddressMap
+    arrival_cycle: np.ndarray | None = None  # (N,) float64 — FPGA cycles
     tags: dict = dataclasses.field(default_factory=dict)
 
     def __len__(self) -> int:
         return int(self.addr.shape[0])
+
+    @property
+    def has_arrivals(self) -> bool:
+        """True when some request arrives after cycle 0 (i.e. the
+        stream is genuinely open-loop, not the closed-loop degeneracy)."""
+        return (self.arrival_cycle is not None
+                and bool(self.arrival_cycle.any()))
 
     def select(self, idx: np.ndarray) -> "RequestStream":
         """Sub-stream / permutation view (fancy-indexes every array)."""
@@ -100,6 +115,8 @@ class RequestStream:
             channel=None if self.channel is None else self.channel[idx],
             local_addr=(None if self.local_addr is None
                         else self.local_addr[idx]),
+            arrival_cycle=(None if self.arrival_cycle is None
+                           else self.arrival_cycle[idx]),
             tags={k: v[idx] for k, v in self.tags.items()})
 
     @classmethod
@@ -110,6 +127,7 @@ class RequestStream:
         *,
         row_bytes: int,
         pe_id=None,
+        arrival_cycle=None,
     ) -> "RequestStream":
         """The single validated ingestion point for row-granular traces
         (every ``modeled_*`` entry point and ``simulate()`` build their
@@ -133,10 +151,12 @@ class RequestStream:
                 f"row id {int(row_ids.max())} * row_bytes {row_bytes} "
                 "overflows the int64 address space")
         addr = row_ids.astype(np.int64) * row_bytes
-        return cls.from_addrs(addr, rw, pe_id=pe_id)
+        return cls.from_addrs(addr, rw, pe_id=pe_id,
+                              arrival_cycle=arrival_cycle)
 
     @classmethod
-    def from_addrs(cls, addrs, rw=None, *, pe_id=None) -> "RequestStream":
+    def from_addrs(cls, addrs, rw=None, *, pe_id=None,
+                   arrival_cycle=None) -> "RequestStream":
         """Ingest a byte-address trace (the channels-layer entry)."""
         addr = np.asarray(addrs, dtype=np.int64).ravel()
         n = addr.shape[0]
@@ -154,8 +174,17 @@ class RequestStream:
             pe = np.asarray(pe_id, dtype=np.int64).ravel()
             if pe.shape[0] != n:
                 raise ValueError("pe_id must have one entry per request")
+        arr = None
+        if arrival_cycle is not None:
+            arr = np.asarray(arrival_cycle, dtype=np.float64).ravel()
+            if arr.shape[0] != n:
+                raise ValueError(
+                    "arrival_cycle must have one entry per request")
+            if n and (not np.isfinite(arr).all() or arr.min() < 0):
+                raise ValueError(
+                    "arrival_cycle entries must be finite and >= 0")
         return cls(addr=addr, rw=rw_arr, pe_id=pe,
-                   seq=np.arange(n, dtype=np.int64))
+                   seq=np.arange(n, dtype=np.int64), arrival_cycle=arr)
 
 
 # ---------------------------------------------------------------------------
@@ -174,10 +203,26 @@ class PipelineContext:
     #: DRAM command scheduler (FR-FCFS + refresh); ``None`` keeps the
     #: strict-FIFO service model of the pre-scheduler pipeline.
     dram_sched: DRAMSchedConfig | None = None
+    #: Open-loop serving mode: ``None`` auto-enables when the stream
+    #: carries non-zero arrival stamps; ``True`` forces the serving
+    #: datapath even for all-zero arrivals (the degeneracy harness);
+    #: ``False`` forces the closed-loop pipeline, ignoring stamps.
+    open_loop: bool | None = None
     # blackboard (written by stages, read by later stages / the runner):
     requests_per_channel: list[int] | None = None   # AddressMap
     sched_batches: int = 0                          # BatchScheduler
     dram_makespan: float = 0.0                      # DRAMService
+    # serving-mode blackboard (PortArbiter defers to DRAMService, which
+    # runs the coupled admission+service model and reports back):
+    arb_ports: int | None = None                    # PortArbiter
+    arb_policy: str = "round_robin"                 # PortArbiter
+    arb_weights: Sequence[int] | None = None        # PortArbiter
+    serving_completion: np.ndarray | None = None    # DRAMService, by seq
+    serving_service: np.ndarray | None = None       # DRAMService, by seq
+    serving_arrival: np.ndarray | None = None       # DRAMService, by seq
+    serving_pe: np.ndarray | None = None            # DRAMService, by seq
+    serving_idle: float = 0.0                       # DRAMService
+    serving_port_stats: "channels_mod.ArbiterStats | None" = None
 
     @classmethod
     def from_config(cls, config: MemoryControllerConfig,
@@ -207,6 +252,76 @@ class StageStats:
 
 
 @dataclasses.dataclass
+class ServingStats:
+    """Per-request latency view of an open-loop run.
+
+    All times are FPGA cycles in the *pipeline* time base: a request's
+    completion includes every exposed pre-DRAM cycle (controller
+    overhead, arbiter fill), so ``sojourn = completion - arrival`` is
+    the full modeled residence time and ``makespan >= arrival + sojourn``
+    holds for every request. ``service`` is the request's own DRAM
+    issue cost (activation/CAS/precharge + burst + any turnaround it
+    triggered); ``queueing = sojourn - service`` is everything it spent
+    waiting — arrival gating, arbitration, reorder, refresh, and the
+    shared fixed overheads.
+    """
+
+    arrival_fpga_cycles: np.ndarray      # (N,) request arrival stamps
+    completion_fpga_cycles: np.ndarray   # (N,) modeled finish times
+    service_fpga_cycles: np.ndarray      # (N,) own DRAM issue cost
+    pe_id: np.ndarray                    # (N,) originating port
+    p50_sojourn: float
+    p95_sojourn: float
+    p99_sojourn: float
+    mean_sojourn: float
+    worst_sojourn: float
+    sustained_req_per_cycle: float       # N / makespan
+    offered_req_per_cycle: float         # N / last arrival (inf if 0)
+    idle_fpga_cycles: float              # summed channel idle time
+    per_port: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def sojourn_fpga_cycles(self) -> np.ndarray:
+        return self.completion_fpga_cycles - self.arrival_fpga_cycles
+
+    @property
+    def queueing_fpga_cycles(self) -> np.ndarray:
+        return self.sojourn_fpga_cycles - self.service_fpga_cycles
+
+    @staticmethod
+    def _percentiles(sojourn: np.ndarray) -> dict:
+        if sojourn.size == 0:
+            return dict(p50_sojourn=0.0, p95_sojourn=0.0, p99_sojourn=0.0,
+                        mean_sojourn=0.0, worst_sojourn=0.0)
+        return dict(
+            p50_sojourn=float(np.percentile(sojourn, 50)),
+            p95_sojourn=float(np.percentile(sojourn, 95)),
+            p99_sojourn=float(np.percentile(sojourn, 99)),
+            mean_sojourn=float(sojourn.mean()),
+            worst_sojourn=float(sojourn.max()))
+
+    @classmethod
+    def from_arrays(cls, arrival, completion, service, pe_id,
+                    makespan: float, idle: float) -> "ServingStats":
+        sojourn = completion - arrival
+        per_port = {}
+        for p in np.unique(pe_id):
+            m = pe_id == p
+            per_port[int(p)] = dict(
+                n=int(m.sum()), **cls._percentiles(sojourn[m]))
+        n = arrival.shape[0]
+        last = float(arrival.max()) if n else 0.0
+        return cls(
+            arrival_fpga_cycles=arrival,
+            completion_fpga_cycles=completion,
+            service_fpga_cycles=service, pe_id=pe_id,
+            sustained_req_per_cycle=n / makespan if makespan else 0.0,
+            offered_req_per_cycle=n / last if last else float("inf"),
+            idle_fpga_cycles=idle, per_port=per_port,
+            **cls._percentiles(sojourn))
+
+
+@dataclasses.dataclass
 class PipelineResult:
     """End-to-end result of one pipeline run.
 
@@ -227,6 +342,8 @@ class PipelineResult:
     n_requests: int
     cache_hit_rate: float | None = None
     port_stats: channels_mod.ArbiterStats | None = None
+    #: per-request sojourn statistics — populated only by open-loop runs
+    serving: ServingStats | None = None
 
     def stage(self, name: str) -> StageStats | None:
         for s in self.stages:
@@ -255,6 +372,14 @@ class PipelineResult:
 # ---------------------------------------------------------------------------
 # Stages
 # ---------------------------------------------------------------------------
+
+def _open_loop_active(stream: RequestStream, ctx: PipelineContext) -> bool:
+    """Resolve the serving-mode switch for this run (shared by the
+    arbiter and DRAM-service stages so they can never disagree)."""
+    if ctx.open_loop is not None:
+        return bool(ctx.open_loop)
+    return stream.has_arrivals
+
 
 def _per_channel(stream: RequestStream, num_channels: int):
     """Stable per-channel selections (arrival order preserved within
@@ -303,6 +428,27 @@ class PortArbiterStage:
     name: str = dataclasses.field(default="port_arbiter", init=False)
 
     def run(self, stream: RequestStream, ctx: PipelineContext):
+        if _open_loop_active(stream, ctx):
+            # Open loop: grant timing is coupled to service timing (a
+            # port's head can only be granted once it has *arrived*, and
+            # grants proceed at the DRAM's issue pace), so arbitration
+            # cannot be a standalone permutation — the stage annotates
+            # the context and defers the coupled admission loop to
+            # DRAMService. The grant-tree fill is charged here as ever.
+            channels_mod._normalize_weights(self.num_ports, self.policy,
+                                            self.weights)   # validate now
+            pe = stream.pe_id
+            if len(stream) and (int(pe.min()) < 0
+                                or int(pe.max()) >= self.num_ports):
+                raise ValueError("pe_id outside [0, num_ports)")
+            ctx.arb_ports = self.num_ports
+            ctx.arb_policy = self.policy
+            ctx.arb_weights = self.weights
+            fill = float(channels_mod.arbiter_fill_cycles(self.num_ports))
+            return stream, StageStats(
+                self.name, fill, len(stream), len(stream),
+                {"port_stats": None, "policy": self.policy,
+                 "deferred_to": "dram_service"})
         order_parts = []
         grants = np.zeros(self.num_ports, np.int64)
         stalls = np.zeros(self.num_ports, np.int64)
@@ -408,6 +554,9 @@ def _concat_streams(streams: list[RequestStream]) -> RequestStream:
         return np.concatenate(arrs) if arrs else np.empty(0, dtype)
     has_ch = all(s.channel is not None for s in streams)
     has_local = all(s.local_addr is not None for s in streams)
+    # arrival is a default, not an annotation: a stream without stamps
+    # is "all pending from 0", so mixing promotes the missing ones to 0
+    has_arr = any(s.arrival_cycle is not None for s in streams)
     return RequestStream(
         addr=cat(lambda s: s.addr, np.int64),
         rw=cat(lambda s: s.rw, np.int32),
@@ -416,6 +565,10 @@ def _concat_streams(streams: list[RequestStream]) -> RequestStream:
         channel=cat(lambda s: s.channel, np.int64) if has_ch else None,
         local_addr=(cat(lambda s: s.local_addr, np.int64)
                     if has_local else None),
+        arrival_cycle=(cat(lambda s: (s.arrival_cycle
+                                      if s.arrival_cycle is not None
+                                      else np.zeros(len(s), np.float64)),
+                           np.float64) if has_arr else None),
         tags={k: cat(lambda s: s.tags[k]) for k in tags_keys})
 
 
@@ -480,6 +633,8 @@ class DRAMServiceStage:
     name: str = dataclasses.field(default="dram_service", init=False)
 
     def run(self, stream: RequestStream, ctx: PipelineContext):
+        if _open_loop_active(stream, ctx):
+            return self._run_serving(stream, ctx)
         sched = ctx.dram_sched
         # The default config degenerates to strict FIFO — skip the
         # scheduler wrapper entirely (it would recompute turnarounds
@@ -512,6 +667,89 @@ class DRAMServiceStage:
             info.update(sched_policy=sched.policy,
                         reorder_window=sched.effective_window,
                         n_refreshes=n_ref)
+        return stream, StageStats(
+            self.name, makespan, len(stream), len(stream), info)
+
+    def _run_serving(self, stream: RequestStream, ctx: PipelineContext):
+        """Open-loop service: each channel runs the coupled
+        admission+scheduling model (:func:`repro.core.timing.
+        simulate_arrivals`) — per-port FIFOs gated on arrival, the
+        configured arbiter granting into the reorder window at issue
+        pace, idle gaps advanced (with refresh absorption). Per-request
+        completion stamps are scattered back by ``seq`` so the runner
+        can report sojourn percentiles against the original stream."""
+        from repro.core.timing import simulate_arrivals
+
+        n = len(stream)
+        if n and int(stream.seq.min()) < 0:
+            raise ValueError(
+                "open-loop serving needs per-request FLIT identity; the "
+                "batch scheduler retires it — run the serving pipeline "
+                "without BatchSchedulerStage")
+        sched = ctx.dram_sched if ctx.dram_sched is not None \
+            else DRAMSchedConfig()
+        arr = stream.arrival_cycle if stream.arrival_cycle is not None \
+            else np.zeros(n, np.float64)
+        nports = ctx.arb_ports
+        size = int(stream.seq.max()) + 1 if n else 0
+        if size != n:
+            raise ValueError(
+                "open-loop serving requires a drop-free stream (one "
+                "completion per ingested request) — disable the cache "
+                "filter for serving runs")
+        completion = np.zeros(size, np.float64)
+        service = np.zeros(size, np.float64)
+        arrival = np.zeros(size, np.float64)
+        pe_by_seq = np.zeros(size, np.int64)
+        per_channel: list[SimResult] = []
+        n_ref = 0
+        idle = 0.0
+        grants = stalls = None
+        if nports is not None and nports > 1:
+            grants = np.zeros(nports, np.int64)
+            stalls = np.zeros(nports, np.int64)
+        for _k, sel in _per_channel(stream, ctx.num_channels):
+            res = simulate_arrivals(
+                stream.local_addr[sel], ctx.timings, sched,
+                rw=stream.rw[sel], arrival_fpga=arr[sel],
+                pe_id=(stream.pe_id[sel] if nports is not None
+                       and nports > 1 else None),
+                num_ports=nports, arb_policy=ctx.arb_policy,
+                weights=ctx.arb_weights)
+            n_ref += res.n_refreshes
+            idle += res.idle_dram_cycles * ctx.timings.clock_ratio
+            seqs = stream.seq[sel]
+            completion[seqs] = res.completion_fpga_cycles
+            service[seqs] = (res.service_dram_cycles
+                             * ctx.timings.clock_ratio)
+            arrival[seqs] = arr[sel]
+            pe_by_seq[seqs] = stream.pe_id[sel]
+            if grants is not None:
+                st = channels_mod.ArbiterStats.from_grant_order(
+                    res.granted_port, nports)
+                grants += st.grants
+                stalls += st.stall_slots
+            per_channel.append(res)
+        makespan = max((r.total_fpga_cycles for r in per_channel),
+                       default=0.0)
+        ctx.dram_makespan = makespan
+        ctx.serving_completion = completion
+        ctx.serving_service = service
+        ctx.serving_arrival = arrival
+        ctx.serving_pe = pe_by_seq
+        ctx.serving_idle = idle
+        if grants is not None:
+            ctx.serving_port_stats = channels_mod.ArbiterStats(
+                grants=grants, stall_slots=stalls,
+                fairness=channels_mod._jain(grants))
+        busy = float(sum(r.total_fpga_cycles for r in per_channel))
+        info = {"per_channel": per_channel, "busy_fpga_cycles": busy,
+                "occupancy_per_channel": [r.total_fpga_cycles
+                                          for r in per_channel],
+                "open_loop": True, "idle_fpga_cycles": idle,
+                "sched_policy": sched.policy,
+                "reorder_window": sched.effective_window,
+                "n_refreshes": n_ref}
         return stream, StageStats(
             self.name, makespan, len(stream), len(stream), info)
 
@@ -595,6 +833,17 @@ def run_pipeline(stream: RequestStream, ctx: PipelineContext,
         if s.name == "port_arbiter":
             arb = s.cycles
             port_stats = s.info["port_stats"]
+    if ctx.serving_port_stats is not None:
+        port_stats = ctx.serving_port_stats
+    serving = None
+    if ctx.serving_completion is not None:
+        # Pre-DRAM exposed cycles (ctrl overhead + arbiter fill) shift
+        # every completion uniformly; makespan == max completion exactly.
+        pre = total - ctx.dram_makespan
+        serving = ServingStats.from_arrays(
+            ctx.serving_arrival, ctx.serving_completion + pre,
+            ctx.serving_service, ctx.serving_pe,
+            makespan=total, idle=ctx.serving_idle)
     return PipelineResult(
         makespan_fpga_cycles=total,
         stages=stats_list,
@@ -605,4 +854,5 @@ def run_pipeline(stream: RequestStream, ctx: PipelineContext,
         arbitration_cycles=arb,
         n_requests=n_in,
         cache_hit_rate=_info("cache_filter", "hit_rate"),
-        port_stats=port_stats)
+        port_stats=port_stats,
+        serving=serving)

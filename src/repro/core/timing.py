@@ -616,6 +616,318 @@ def simulate_dram_sched(
     return trace_engine.simulate_dram_sched_fast(addrs, timings, sched, rw)
 
 
+# ---------------------------------------------------------------------------
+# Open-loop (arrival-aware) serving simulator
+# ---------------------------------------------------------------------------
+
+#: Arbitration policies the serving loop understands — semantically the
+#: same set as ``repro.core.channels.ARBITER_POLICIES`` (this module
+#: cannot import channels, which imports it).
+SERVING_ARB_POLICIES = ("round_robin", "priority", "weighted")
+
+
+def _serving_weights(num_ports: int, policy: str, weights) -> list[int]:
+    """Validate (policy, weights) exactly like the channels-layer
+    arbiter does and return one integer credit per port."""
+    if policy not in SERVING_ARB_POLICIES:
+        raise ValueError(f"arbiter policy {policy!r} must be one of "
+                         f"{SERVING_ARB_POLICIES}")
+    if policy != "weighted":
+        return [1] * num_ports
+    if weights is None:
+        raise ValueError("policy='weighted' requires per-port weights")
+    w = np.asarray(weights, dtype=np.int64)
+    if w.shape != (num_ports,) or (w < 1).any():
+        raise ValueError("weights must be one positive integer per port")
+    return [int(x) for x in w]
+
+
+@dataclasses.dataclass
+class ServingSimResult(SchedSimResult):
+    """:class:`SchedSimResult` extended with open-loop observability.
+
+    ``total_fpga_cycles`` becomes the channel *span* — the completion
+    time of the last request including any idle gaps spent waiting for
+    arrivals (with all arrivals at 0 there are no gaps and the closed-
+    loop count identity holds exactly). ``completion_fpga_cycles[i]``
+    is request ``i``'s service-completion time on the channel clock
+    (sojourn = completion − arrival); ``service_dram_cycles[i]`` the
+    DRAM-command clocks its issue occupied the interface (class cost +
+    burst + any turnaround it triggered; refresh stalls excluded).
+    ``grant_order`` is the admission permutation (request index per
+    grant slot), ``granted_port`` the port that won each slot, and
+    ``idle_dram_cycles`` the clocks the interface sat with an empty
+    pending window (including the tail of a refresh it had to wait out
+    after an idle gap).
+    """
+
+    completion_fpga_cycles: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.float64))
+    service_dram_cycles: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
+    grant_order: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
+    granted_port: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
+    idle_dram_cycles: float = 0.0
+
+
+def _serving_trace(addrs, timings, rw, arrival_fpga, pe_id, num_ports):
+    """Shared input validation/decode for both serving implementations —
+    the FPGA-cycle → DRAM-clock conversion in particular must be the
+    *same float expression* on both paths (bit-identity)."""
+    addrs = np.asarray(addrs, dtype=np.int64).ravel()
+    n = addrs.size
+    rw_arr = None if rw is None else np.asarray(rw, np.int32).ravel()
+    if arrival_fpga is None:
+        arr = np.zeros(n, np.float64)
+    else:
+        arr = np.asarray(arrival_fpga, np.float64).ravel()
+        if arr.shape[0] != n:
+            raise ValueError("arrival_fpga must have one entry per request")
+        if n and (not np.isfinite(arr).all() or arr.min() < 0):
+            raise ValueError("arrival_fpga must be finite and non-negative")
+    arr = arr / timings.clock_ratio          # FPGA cycles -> DRAM clocks
+    if pe_id is None or num_ports is None or num_ports <= 1:
+        ports, nports = np.zeros(n, np.int64), 1
+    else:
+        ports = np.asarray(pe_id, np.int64).ravel()
+        nports = int(num_ports)
+        if ports.shape[0] != n:
+            raise ValueError("pe_id must have one entry per request")
+        if n and (ports.min() < 0 or ports.max() >= nports):
+            raise ValueError("pe_id outside [0, num_ports)")
+    return addrs, n, rw_arr, arr, ports, nports
+
+
+def simulate_arrivals_seq(
+    addrs: np.ndarray,
+    timings: DRAMTimings = DDR4_2400,
+    sched: DRAMSchedConfig = DRAMSchedConfig(),
+    rw: np.ndarray | None = None,
+    *,
+    arrival_fpga: np.ndarray | None = None,
+    pe_id: np.ndarray | None = None,
+    num_ports: int | None = None,
+    arb_policy: str = "round_robin",
+    weights=None,
+) -> ServingSimResult:
+    """Request-at-a-time oracle for the *open-loop* channel — THE
+    specification for arrival gating, idle-gap advance and service-paced
+    arbitration that the fast path
+    (:func:`repro.core.trace_engine.simulate_arrivals_fast`) is
+    property-tested bit-identical against.
+
+    Requests live in per-port FIFO queues (``pe_id``); a head is
+    *eligible* once its ``arrival_fpga`` stamp (converted once to DRAM
+    clocks) is ≤ the channel clock. One coupled loop:
+
+    * **admission**: eligible heads are granted into the
+      ``reorder_window``-deep pending window at service pace. The grant
+      order is the arbiter's: fixed ``priority`` takes the lowest
+      eligible port; (weighted) round robin keeps a rotating pointer
+      with per-rotation credits — a port whose head has not arrived (or
+      whose queue is empty) forfeits the rest of its credit for that
+      rotation. This coupling is what makes arbitration a tenant-
+      isolation mechanism: a backlogged hog cannot pre-enqueue its whole
+      burst ahead of a later-arriving victim, because grants happen one
+      service slot at a time against a bounded window.
+    * **idle-gap advance**: with nothing pending and every queued head
+      in the future, the clock jumps to the earliest head arrival.
+      Refreshes that complete inside the gap overlap with idleness
+      (banks still close, nothing stalls); one still in progress at the
+      jump target delays the next issue to its end.
+    * **refresh / pick / service**: identical to
+      :func:`simulate_dram_sched_seq` — the accumulated-service refresh
+      rule, the fifo / frfcfs / frfcfs_cap pick over the pending window
+      (oldest = earliest *grant*), per-bank open-row classification,
+      bus-turnaround against the issued direction sequence, and the
+      positional bypass counters behind the starvation cap.
+
+    The channel clock is tracked as ``anchor + offset`` — a float
+    anchor assigned only at idle jumps plus an exact integer offset of
+    service/refresh clocks — so every timestamp is produced by a single
+    float rounding and the fast path can batch integer cost sums while
+    remaining bit-identical. With every arrival at 0 the anchor stays
+    integer zero and the loop degenerates *exactly*: single-port to
+    :func:`simulate_dram_sched_seq`, multi-port to
+    ``arbitrate_ports_seq`` composed with it (same permutation, counts
+    and makespan — the closed-loop degeneracy property tests).
+    """
+    addrs, n, rw_arr, arr, ports, nports = _serving_trace(
+        addrs, timings, rw, arrival_fpga, pe_id, num_ports)
+    if n == 0:
+        return ServingSimResult(total_fpga_cycles=0.0, row_hits=0,
+                                row_conflicts=0, first_accesses=0)
+    rows = timings.row_of(addrs)
+    banks = timings.bank_of(addrs)
+    w = sched.effective_window
+    use_cap = sched.policy == "frfcfs_cap"
+    t_refi, t_rfc = sched.t_refi, sched.t_rfc
+    credits = _serving_weights(nports, arb_policy, weights)
+    priority = arb_policy == "priority"
+
+    queues = [list(np.flatnonzero(ports == p)) for p in range(nports)]
+    heads = [0] * nports
+    open_row: dict[int, int] = {}
+    pending: list[int] = []
+    bypass: list[int] = []          # positional, parallel to ``pending``
+    ptr, credit = 0, credits[0]     # (weighted) round-robin rotation state
+    anchor: float | int = 0         # set only by idle jumps
+    off = 0                         # integer service/refresh clocks since
+    next_ref = t_refi
+    n_hit = n_conflict = n_first = n_ref = turn = 0
+    last_dir = -1
+    idle = 0.0
+    served = 0
+    completion = np.zeros(n, np.float64)
+    service = np.zeros(n, np.int64)
+    grant_order: list[int] = []
+    granted_port: list[int] = []
+    order: list[int] = []
+
+    def eligible(p: int) -> bool:
+        h = heads[p]
+        return h < len(queues[p]) and arr[queues[p][h]] <= anchor + off
+
+    while served < n:
+        while len(pending) < w:              # -- admission
+            g = -1
+            if priority:
+                for p in range(nports):
+                    if eligible(p):
+                        g = p
+                        break
+            else:
+                for _ in range(nports + 1):
+                    if credit > 0 and eligible(ptr):
+                        g = ptr
+                        credit -= 1
+                        break
+                    ptr = (ptr + 1) % nports
+                    credit = credits[ptr]
+            if g < 0:
+                break
+            idx = queues[g][heads[g]]
+            heads[g] += 1
+            pending.append(idx)
+            bypass.append(0)
+            grant_order.append(idx)
+            granted_port.append(g)
+        if not pending:                      # -- idle-gap advance
+            target = min(arr[queues[p][heads[p]]] for p in range(nports)
+                         if heads[p] < len(queues[p]))
+            if t_refi:
+                while next_ref <= target:
+                    n_ref += 1
+                    open_row.clear()
+                    end = next_ref + t_rfc
+                    next_ref += t_refi
+                    if end > target:
+                        target = end         # arrived mid-refresh
+            idle += target - (anchor + off)
+            anchor, off = target, 0
+            continue
+        if t_refi:
+            while anchor + off >= next_ref:  # refresh precedes the issue
+                off += t_rfc
+                n_ref += 1
+                open_row.clear()
+                next_ref += t_refi
+        pick = 0
+        if w > 1:
+            forced = None
+            if use_cap:
+                for i in range(len(pending)):
+                    if bypass[i] >= sched.starvation_cap:
+                        forced = i
+                        break
+            if forced is not None:
+                pick = forced
+            else:
+                for i, j in enumerate(pending):
+                    b = int(banks[j])
+                    if b in open_row and open_row[b] == rows[j]:
+                        pick = i
+                        break
+        idx = pending.pop(pick)
+        bypass.pop(pick)
+        b, r = int(banks[idx]), int(rows[idx])
+        if b not in open_row:
+            n_first += 1
+            cost = timings.t_rcd + timings.t_cl
+        elif open_row[b] == r:
+            n_hit += 1
+            cost = timings.t_cl
+        else:
+            n_conflict += 1
+            cost = timings.t_rp + timings.t_rcd + timings.t_cl
+        open_row[b] = r
+        cost += timings.t_burst
+        if rw_arr is not None:
+            d = int(rw_arr[idx])
+            if last_dir == 1 and d == 0:
+                turn += timings.t_wtr
+                cost += timings.t_wtr
+            elif last_dir == 0 and d == 1:
+                turn += timings.t_rtw
+                cost += timings.t_rtw
+            last_dir = d
+        off += cost
+        for i in range(pick):        # entries granted earlier were bypassed
+            bypass[i] += 1
+        completion[idx] = anchor + off
+        service[idx] = cost
+        order.append(idx)
+        served += 1
+
+    return ServingSimResult(
+        total_fpga_cycles=(anchor + off) * timings.clock_ratio,
+        row_hits=n_hit, row_conflicts=n_conflict, first_accesses=n_first,
+        n_refreshes=n_ref, refresh_dram_cycles=n_ref * t_rfc,
+        turnaround_dram_cycles=turn,
+        service_order=np.asarray(order, dtype=np.int64),
+        completion_fpga_cycles=completion * timings.clock_ratio,
+        service_dram_cycles=service,
+        grant_order=np.asarray(grant_order, dtype=np.int64),
+        granted_port=np.asarray(granted_port, dtype=np.int64),
+        idle_dram_cycles=idle)
+
+
+def simulate_arrivals(
+    addrs: np.ndarray,
+    timings: DRAMTimings = DDR4_2400,
+    sched: DRAMSchedConfig = DRAMSchedConfig(),
+    rw: np.ndarray | None = None,
+    *,
+    arrival_fpga: np.ndarray | None = None,
+    pe_id: np.ndarray | None = None,
+    num_ports: int | None = None,
+    arb_policy: str = "round_robin",
+    weights=None,
+    engine: str = "auto",
+) -> ServingSimResult:
+    """Open-loop channel service — the fast engine, bit-identical to
+    :func:`simulate_arrivals_seq` (property-tested over arrival process
+    × ports × arbiter policy × DRAM policy × window × cap × refresh ×
+    rw). Single-port streams run the chunked frontier scan in
+    ``repro.core.trace_engine`` (row-hit runs at array speed, truncated
+    by arrival/refresh/window boundaries); multi-port streams run its
+    optimized admission-coupled event loop."""
+    if engine not in ("auto", "fast", "sequential"):
+        raise ValueError(f"engine={engine!r} must be auto|fast|sequential")
+    if engine == "sequential":
+        return simulate_arrivals_seq(
+            addrs, timings, sched, rw, arrival_fpga=arrival_fpga,
+            pe_id=pe_id, num_ports=num_ports, arb_policy=arb_policy,
+            weights=weights)
+    from repro.core import trace_engine
+    return trace_engine.simulate_arrivals_fast(
+        addrs, timings, sched, rw, arrival_fpga=arrival_fpga,
+        pe_id=pe_id, num_ports=num_ports, arb_policy=arb_policy,
+        weights=weights)
+
+
 def modeled_bandwidth_gbps(
     result: SimResult, total_bytes: int, timings: DRAMTimings = DDR4_2400
 ) -> float:

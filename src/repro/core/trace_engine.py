@@ -885,3 +885,513 @@ def simulate_dram_sched_fast(addrs, timings, sched, rw=None):
         grow = chunk * 2 if take == chunk else 32
     return _sched_result(n_first, n_hit, n_conflict, n, turn, n_ref,
                          t_rfc, timings, out)
+
+
+def simulate_arrivals_fast(addrs, timings, sched, rw=None, *,
+                           arrival_fpga=None, pe_id=None, num_ports=None,
+                           arb_policy="round_robin", weights=None):
+    """Fast path of :func:`repro.core.timing.simulate_arrivals` —
+    bit-identical to ``simulate_arrivals_seq`` (property-tested over
+    arrival process x ports x arbiter policy x DRAM policy x window x
+    cap x refresh x rw).
+
+    Single-port streams admit in trace order, so the closed-loop
+    chunked frontier scan of :func:`simulate_dram_sched_fast`
+    generalizes: classify a frontier chunk against current bank state,
+    issue every *arrived* hit in one array op and defer the arrived
+    misses, with the run truncated by whichever binds first — the
+    arrival gate (a request is admitted only once the clock reaches its
+    stamp), the window filling with misses, the starvation budget, or
+    the next refresh boundary — plus an idle-gap advance when the
+    frontier itself is in the future. Multi-port streams couple
+    admission to the arbiter's rotation state, where deferring a grant
+    changes *which* port wins the slot, so they run an optimized
+    event-at-a-time loop instead (python lists + anchored clock, same
+    spec).
+
+    Both paths track the clock as ``anchor + offset`` (float anchor set
+    only at idle jumps, exact integer offset) exactly like the oracle,
+    so batched integer cost sums land on bit-identical timestamps.
+    """
+    from repro.core.timing import (ServingSimResult, _serving_trace,
+                                   _serving_weights)
+
+    addrs, n, rw_arr, arr, ports, nports = _serving_trace(
+        addrs, timings, rw, arrival_fpga, pe_id, num_ports)
+    _serving_weights(nports, arb_policy, weights)   # validate up front
+    if n == 0:
+        return ServingSimResult(total_fpga_cycles=0.0, row_hits=0,
+                                row_conflicts=0, first_accesses=0)
+    if nports == 1:
+        return _arrivals_fast_single(addrs, n, timings, sched, rw_arr, arr,
+                                     ServingSimResult)
+    return _arrivals_fast_multi(addrs, n, timings, sched, rw_arr, arr,
+                                ports, nports, arb_policy, weights,
+                                ServingSimResult)
+
+
+def _arrivals_fast_single(addrs, n, timings, sched, rw_arr, arr, result_cls):
+    """Arrival-gated chunked frontier scan (single admission queue)."""
+    rows = timings.row_of(addrs)
+    banks = timings.bank_of(addrs)
+    w = sched.effective_window
+    use_cap = sched.policy == "frfcfs_cap"
+    cap = sched.starvation_cap
+    t_refi, t_rfc = sched.t_refi, sched.t_rfc
+    t_wtr, t_rtw = timings.t_wtr, timings.t_rtw
+    cost_hit = timings.t_cl + timings.t_burst
+    cost_first = timings.t_rcd + timings.t_cl + timings.t_burst
+    cost_conf = (timings.t_rp + timings.t_rcd + timings.t_cl
+                 + timings.t_burst)
+
+    open_arr = np.zeros(timings.num_banks, np.int64)
+    opened = np.zeros(timings.num_banks, bool)
+    banks_l = banks.tolist()
+    rows_l = rows.tolist()
+    rw_l = None if rw_arr is None else rw_arr.tolist()
+    arr_l = arr.tolist()
+    open_l = [0] * timings.num_banks
+    opened_l = [False] * timings.num_banks
+    deferred: list[int] = []    # admitted misses, admission order
+    byp: list[int] = []         # issues past each, parallel list
+    out = np.empty(n, np.int64)
+    out_n = 0
+    completion = np.zeros(n, np.float64)
+    service = np.zeros(n, np.int64)
+    f = 0
+    anchor = 0                  # float once the channel has idled
+    off = 0                     # exact integer clocks since anchor
+    next_ref = t_refi
+    n_hit = n_conflict = n_first = n_ref = turn = 0
+    last_dir = -1
+    idle = 0.0
+    grow = max(64, 4 * w)
+
+    def serve_scalar(idx: int) -> None:
+        nonlocal n_hit, n_conflict, n_first, off, turn, last_dir, out_n
+        b, r = banks_l[idx], rows_l[idx]
+        if not opened_l[b]:
+            n_first += 1
+            c = cost_first
+        elif open_l[b] == r:
+            n_hit += 1
+            c = cost_hit
+        else:
+            n_conflict += 1
+            c = cost_conf
+        opened_l[b] = True
+        open_l[b] = r
+        opened[b] = True
+        open_arr[b] = r
+        if rw_l is not None:
+            d = rw_l[idx]
+            if last_dir == 1 and d == 0:
+                turn += t_wtr
+                c += t_wtr
+            elif last_dir == 0 and d == 1:
+                turn += t_rtw
+                c += t_rtw
+            last_dir = d
+        off += c
+        completion[idx] = anchor + off
+        service[idx] = c
+        out[out_n] = idx
+        out_n += 1
+
+    while f < n or deferred:
+        if not deferred and arr_l[f] > anchor + off:
+            # idle-gap advance: refreshes completing inside the gap
+            # overlap with idleness; one in progress at the target
+            # delays the next issue to its end (oracle's absorb rule)
+            target = arr_l[f]
+            if t_refi:
+                while next_ref <= target:
+                    n_ref += 1
+                    opened[:] = False
+                    opened_l = [False] * timings.num_banks
+                    end = next_ref + t_rfc
+                    next_ref += t_refi
+                    if end > target:
+                        target = end
+            idle += target - (anchor + off)
+            anchor, off = target, 0
+        if t_refi:
+            while anchor + off >= next_ref:   # refresh precedes the issue
+                off += t_rfc
+                n_ref += 1
+                opened[:] = False
+                opened_l = [False] * timings.num_banks
+                next_ref += t_refi
+        frontier_ok = f < n and arr_l[f] <= anchor + off
+        if deferred and (len(deferred) >= w or not frontier_ok
+                         or (use_cap and byp[0] >= cap)):
+            # -- event: issue the oldest admitted miss, then drain the
+            # deferred requests its newly opened row converts into hits
+            serve_scalar(deferred.pop(0))
+            if use_cap:
+                byp.pop(0)
+                while deferred:
+                    if t_refi and anchor + off >= next_ref:
+                        break
+                    if byp[0] >= cap:
+                        i = 0
+                    elif len(deferred) <= 48:
+                        i = -1
+                        for kk, dd in enumerate(deferred):
+                            bb = banks_l[dd]
+                            if opened_l[bb] and open_l[bb] == rows_l[dd]:
+                                i = kk
+                                break
+                        if i < 0:
+                            break
+                    else:
+                        d_arr = np.asarray(deferred, np.int64)
+                        db = banks[d_arr]
+                        cand = np.flatnonzero(
+                            opened[db] & (open_arr[db] == rows[d_arr]))
+                        if cand.size == 0:
+                            break
+                        i = int(cand[0])
+                    serve_scalar(deferred.pop(i))
+                    byp.pop(i)
+                    for kk in range(i):
+                        byp[kk] += 1
+            elif deferred and len(deferred) <= 48:
+                cand_pos = [kk for kk, dd in enumerate(deferred)
+                            if opened_l[banks_l[dd]]
+                            and open_l[banks_l[dd]] == rows_l[dd]]
+                if cand_pos:
+                    served_pos: list[int] = []
+                    for kk in cand_pos:
+                        if t_refi and anchor + off >= next_ref:
+                            break
+                        serve_scalar(deferred[kk])
+                        served_pos.append(kk)
+                    if served_pos:
+                        drop = set(served_pos)
+                        deferred = [dd for kk, dd in enumerate(deferred)
+                                    if kk not in drop]
+            elif deferred:
+                # vectorized deep-window drain, cut by refresh only
+                d_arr = np.asarray(deferred, np.int64)
+                db = banks[d_arr]
+                cand = np.flatnonzero(
+                    opened[db] & (open_arr[db] == rows[d_arr]))
+                if cand.size:
+                    idxs = d_arr[cand]
+                    tcosts = None
+                    if rw_arr is not None:
+                        dirs = rw_arr[idxs]
+                        prev = np.concatenate(([last_dir], dirs[:-1]))
+                        tcosts = np.where(
+                            (prev == 1) & (dirs == 0), t_wtr,
+                            np.where((prev == 0) & (dirs == 1),
+                                     t_rtw, 0)).astype(np.int64)
+                    costs = (np.full(cand.size, cost_hit, np.int64)
+                             if tcosts is None else cost_hit + tcosts)
+                    ends = off + np.cumsum(costs)
+                    j = cand.size
+                    if t_refi:
+                        cross = np.flatnonzero(
+                            anchor + (ends - costs) >= next_ref)
+                        if cross.size:
+                            j = int(cross[0])
+                    if j:
+                        n_hit += j
+                        if tcosts is not None:
+                            tsum = int(tcosts[:j].sum())
+                            turn += tsum
+                            last_dir = int(rw_arr[idxs[j - 1]])
+                        completion[idxs[:j]] = anchor + ends[:j]
+                        service[idxs[:j]] = costs[:j]
+                        off = int(ends[j - 1])
+                        out[out_n:out_n + j] = idxs[:j]
+                        out_n += j
+                        keep = np.ones(d_arr.size, bool)
+                        keep[cand[:j]] = False
+                        deferred = [d for d, m in zip(deferred, keep)
+                                    if m]
+            continue
+        if f >= n:
+            break
+        # -- scalar lane: defer leading misses (admission advances no
+        # clock, so a frontier miss is pure bookkeeping) and, while the
+        # arrived backlog is short, serve hits one at a time — the scan
+        # machinery only pays off once a real backlog forms. Break
+        # conditions mirror the scan's truncations; the event branch
+        # above guarantees byp[0] < cap and a refresh-clean clock at
+        # entry, so a break always makes progress first (moved=True).
+        moved = False
+        while f < n and arr_l[f] <= anchor + off:
+            b = banks_l[f]
+            if opened_l[b] and open_l[b] == rows_l[f]:
+                if len(deferred) >= w:
+                    break                     # window full: event drains
+                if f + 16 < n and arr_l[f + 16] <= anchor + off:
+                    break                     # backlog: vectorized scan
+                if use_cap and byp and byp[0] >= cap:
+                    break                     # cap: event serves a miss
+                if t_refi and anchor + off >= next_ref:
+                    break                     # refresh precedes the issue
+                serve_scalar(f)
+                if use_cap:
+                    for kk in range(len(byp)):
+                        byp[kk] += 1
+            else:
+                if len(deferred) >= w:
+                    break                     # window full: event drains
+                deferred.append(f)
+                if use_cap:
+                    byp.append(0)
+            f += 1
+            moved = True
+        if moved:
+            continue
+        # -- scan run: serve arrived frontier hits, defer arrived misses
+        room = w - len(deferred)
+        chunk = min(max(32, 4 * room, grow), n - f)
+        sl = slice(f, f + chunk)
+        bsl = banks[sl]
+        hm = opened[bsl] & (open_arr[bsl] == rows[sl])
+        hit_all = np.flatnonzero(hm)
+        costs_full = np.zeros(chunk, np.int64)
+        tc = None
+        if rw_arr is not None and hit_all.size:
+            dirs = rw_arr[f + hit_all]
+            prev = np.concatenate(([last_dir], dirs[:-1]))
+            tc = np.where((prev == 1) & (dirs == 0), t_wtr,
+                          np.where((prev == 0) & (dirs == 1),
+                                   t_rtw, 0)).astype(np.int64)
+            costs_full[hit_all] = cost_hit + tc
+        else:
+            costs_full[hit_all] = cost_hit
+        ends_full = off + np.cumsum(costs_full)
+        pre_full = ends_full - costs_full
+        take = chunk
+        # arrival gate: position j is admitted right after the issue of
+        # every earlier chunk entry — eligible iff arrived by that clock
+        late = np.flatnonzero(arr[sl] > anchor + pre_full)
+        if late.size:
+            take = int(late[0])
+        miss_rel = np.flatnonzero(~hm[:take])
+        if miss_rel.size >= room:
+            t2 = int(miss_rel[room - 1]) + 1     # through the room-th miss
+            if t2 < take:
+                take = t2
+            miss_rel = miss_rel[:room]
+        hit_rel = hit_all[hit_all < take]
+        if use_cap and hit_rel.size:
+            if deferred:
+                # every hit here is younger than the oldest pending miss
+                budget = cap - byp[0]            # >= 1: event checked above
+                if hit_rel.size > budget:
+                    take = int(hit_rel[budget])
+                    hit_rel = hit_rel[:budget]
+                    miss_rel = miss_rel[miss_rel < take]
+            elif miss_rel.size:
+                # only hits *after* the first new miss bypass it
+                after = hit_rel[hit_rel > miss_rel[0]]
+                if after.size > cap:
+                    take = int(after[cap])
+                    hit_rel = hit_rel[hit_rel < take]
+                    miss_rel = miss_rel[miss_rel < take]
+        if t_refi and hit_rel.size:
+            cross = np.flatnonzero(anchor + pre_full[hit_rel] >= next_ref)
+            if cross.size:
+                kcut = int(cross[0])             # >= 1: refresh ran above
+                take = int(hit_rel[kcut])
+                hit_rel = hit_rel[:kcut]
+                miss_rel = miss_rel[miss_rel < take]
+        k = hit_rel.size
+        if k:
+            n_hit += k
+            if tc is not None:
+                tsum = int(tc[:k].sum())         # hit_rel prefixes hit_all
+                turn += tsum
+                last_dir = int(rw_arr[f + hit_rel[-1]])
+            completion[f + hit_rel] = anchor + ends_full[hit_rel]
+            service[f + hit_rel] = costs_full[hit_rel]
+            off = int(ends_full[hit_rel[-1]])
+            out[out_n:out_n + k] = f + hit_rel
+            out_n += k
+        if use_cap:
+            if k and byp:
+                byp = [b + k for b in byp]
+            if miss_rel.size:
+                new_byp = k - np.searchsorted(hit_rel, miss_rel)
+                byp.extend(int(b) for b in new_byp)
+        if miss_rel.size:
+            deferred.extend(int(m) for m in (f + miss_rel))
+        f += take
+        grow = chunk * 2 if take == chunk else 64
+    return result_cls(
+        total_fpga_cycles=(anchor + off) * timings.clock_ratio,
+        row_hits=n_hit, row_conflicts=n_conflict, first_accesses=n_first,
+        n_refreshes=n_ref, refresh_dram_cycles=n_ref * t_rfc,
+        turnaround_dram_cycles=turn,
+        service_order=out,
+        completion_fpga_cycles=completion * timings.clock_ratio,
+        service_dram_cycles=service,
+        grant_order=np.arange(n, dtype=np.int64),
+        granted_port=np.zeros(n, np.int64),
+        idle_dram_cycles=idle)
+
+
+def _arrivals_fast_multi(addrs, n, timings, sched, rw_arr, arr, ports,
+                         nports, arb_policy, weights, result_cls):
+    """Optimized event-at-a-time serving loop for arbitrated streams.
+
+    Admission is coupled to the arbiter's rotation state, so deferring
+    a grant can change which port wins a slot — the frontier-scan
+    batching of the single-port path does not apply. Same spec as the
+    oracle, with python-list state (~an order of magnitude cheaper than
+    dict/numpy scalar indexing in this regime)."""
+    from repro.core.timing import _serving_weights
+
+    rows = timings.row_of(addrs)
+    banks = timings.bank_of(addrs)
+    w = sched.effective_window
+    use_cap = sched.policy == "frfcfs_cap"
+    cap = sched.starvation_cap
+    t_refi, t_rfc = sched.t_refi, sched.t_rfc
+    t_wtr, t_rtw = timings.t_wtr, timings.t_rtw
+    t_cl, t_rcd, t_rp = timings.t_cl, timings.t_rcd, timings.t_rp
+    t_burst = timings.t_burst
+    credits = _serving_weights(nports, arb_policy, weights)
+    priority = arb_policy == "priority"
+
+    banks_l = banks.tolist()
+    rows_l = rows.tolist()
+    rw_l = None if rw_arr is None else rw_arr.tolist()
+    arr_l = arr.tolist()
+    queues = [np.flatnonzero(ports == p).tolist() for p in range(nports)]
+    qlen = [len(q) for q in queues]
+    heads = [0] * nports
+    open_l = [0] * timings.num_banks
+    opened_l = [False] * timings.num_banks
+    pending: list[int] = []
+    bypass: list[int] = []
+    ptr, credit = 0, credits[0]
+    anchor = 0
+    off = 0
+    next_ref = t_refi
+    n_hit = n_conflict = n_first = n_ref = turn = 0
+    last_dir = -1
+    idle = 0.0
+    served = 0
+    completion = np.zeros(n, np.float64)
+    service = np.zeros(n, np.int64)
+    out = np.empty(n, np.int64)
+    grant_order = np.empty(n, np.int64)
+    granted_port = np.empty(n, np.int64)
+    granted = 0
+
+    while served < n:
+        cur = anchor + off
+        while len(pending) < w:              # -- admission
+            g = -1
+            if priority:
+                for p in range(nports):
+                    h = heads[p]
+                    if h < qlen[p] and arr_l[queues[p][h]] <= cur:
+                        g = p
+                        break
+            else:
+                for _ in range(nports + 1):
+                    if credit > 0:
+                        h = heads[ptr]
+                        if h < qlen[ptr] and arr_l[queues[ptr][h]] <= cur:
+                            g = ptr
+                            credit -= 1
+                            break
+                    ptr += 1
+                    if ptr == nports:
+                        ptr = 0
+                    credit = credits[ptr]
+            if g < 0:
+                break
+            idx = queues[g][heads[g]]
+            heads[g] += 1
+            pending.append(idx)
+            bypass.append(0)
+            grant_order[granted] = idx
+            granted_port[granted] = g
+            granted += 1
+        if not pending:                      # -- idle-gap advance
+            target = min(arr_l[queues[p][heads[p]]] for p in range(nports)
+                         if heads[p] < qlen[p])
+            if t_refi:
+                while next_ref <= target:
+                    n_ref += 1
+                    opened_l = [False] * timings.num_banks
+                    end = next_ref + t_rfc
+                    next_ref += t_refi
+                    if end > target:
+                        target = end
+            idle += target - (anchor + off)
+            anchor, off = target, 0
+            continue
+        if t_refi:
+            while anchor + off >= next_ref:
+                off += t_rfc
+                n_ref += 1
+                opened_l = [False] * timings.num_banks
+                next_ref += t_refi
+        pick = 0
+        if w > 1:
+            forced = -1
+            if use_cap:
+                for i, bp in enumerate(bypass):
+                    if bp >= cap:
+                        forced = i
+                        break
+            if forced >= 0:
+                pick = forced
+            else:
+                for i, j in enumerate(pending):
+                    b = banks_l[j]
+                    if opened_l[b] and open_l[b] == rows_l[j]:
+                        pick = i
+                        break
+        idx = pending.pop(pick)
+        bypass.pop(pick)
+        b, r = banks_l[idx], rows_l[idx]
+        if not opened_l[b]:
+            n_first += 1
+            cost = t_rcd + t_cl
+        elif open_l[b] == r:
+            n_hit += 1
+            cost = t_cl
+        else:
+            n_conflict += 1
+            cost = t_rp + t_rcd + t_cl
+        opened_l[b] = True
+        open_l[b] = r
+        cost += t_burst
+        if rw_l is not None:
+            d = rw_l[idx]
+            if last_dir == 1 and d == 0:
+                turn += t_wtr
+                cost += t_wtr
+            elif last_dir == 0 and d == 1:
+                turn += t_rtw
+                cost += t_rtw
+            last_dir = d
+        off += cost
+        for i in range(pick):
+            bypass[i] += 1
+        completion[idx] = anchor + off
+        service[idx] = cost
+        out[served] = idx
+        served += 1
+    return result_cls(
+        total_fpga_cycles=(anchor + off) * timings.clock_ratio,
+        row_hits=n_hit, row_conflicts=n_conflict, first_accesses=n_first,
+        n_refreshes=n_ref, refresh_dram_cycles=n_ref * t_rfc,
+        turnaround_dram_cycles=turn,
+        service_order=out,
+        completion_fpga_cycles=completion * timings.clock_ratio,
+        service_dram_cycles=service,
+        grant_order=grant_order,
+        granted_port=granted_port,
+        idle_dram_cycles=idle)

@@ -9,6 +9,15 @@ decoded in lockstep. Cache-line vs DMA routing maps to decode (latency-
 critical, prioritized) vs prefill (bulk, throughput) — decode steps run
 ahead of admitting new prefill work, mirroring the cache-priority rule.
 
+Each served batch also drives the *modeled* memory system: the KV-cache
+access stream of prefill + lockstep decode (page reads/appends per
+request, stamped with open-loop arrival times) is replayed through
+``MemoryController.simulate`` (ARCHITECTURE §9), so a serve run reports
+modeled p50/p95/p99 memory sojourn per tenant next to the functional
+outputs. ``Request.tenant`` maps to the controller port — weighted
+arbitration + starvation cap is what protects a latency-SLO tenant from
+a bandwidth hog sharing the controller (tests/launch/test_serve.py).
+
 CPU-runnable demo: ``python -m repro.launch.serve --arch yi-34b --smoke``.
 """
 
@@ -24,9 +33,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.config import SchedulerConfig
+from repro.core.config import MemoryControllerConfig, SchedulerConfig
+from repro.core.controller import MemoryController
 from repro.core.scheduler import form_batches
 from repro.models.lm import build_lm
+
+#: KV page granularity of the modeled access stream (bytes per token row)
+KV_PAGE_BYTES = 256
 
 
 @dataclasses.dataclass
@@ -35,6 +48,7 @@ class Request:
     prompt: np.ndarray          # (S,) int32
     max_new_tokens: int = 16
     arrival_cycle: int = 0
+    tenant: int = 0             # controller port this request issues from
     output: Optional[List[int]] = None
 
 
@@ -45,18 +59,33 @@ class ServeStats:
     decode_steps: int = 0
     prefill_tokens: int = 0
     wall_s: float = 0.0
+    # modeled memory-system latency (FPGA cycles) of the KV access stream
+    modeled_p50_cycles: float = 0.0
+    modeled_p95_cycles: float = 0.0
+    modeled_p99_cycles: float = 0.0
+    modeled_makespan_cycles: float = 0.0
+    modeled_per_tenant: Dict[int, dict] = dataclasses.field(
+        default_factory=dict)
 
 
 class Server:
     """Batched prefill + lockstep decode with scheduler-based admission."""
 
     def __init__(self, arch: str, *, smoke: bool = False, mesh=None,
-                 sched: SchedulerConfig | None = None):
+                 sched: SchedulerConfig | None = None,
+                 mem: MemoryControllerConfig | None = None,
+                 arb_policy: str = "round_robin",
+                 arb_weights=None,
+                 decode_interval_cycles: int = 64):
         self.cfg = get_arch(arch, smoke=smoke)
         if self.cfg.family == "encoder":
             raise ValueError("encoder-only architectures do not decode")
         self.lm = build_lm(self.cfg, mesh)
         self.sched = sched or SchedulerConfig(batch_size=8, timeout_cycles=32)
+        self.controller = MemoryController(mem or MemoryControllerConfig())
+        self.arb_policy = arb_policy
+        self.arb_weights = arb_weights
+        self.decode_interval_cycles = int(decode_interval_cycles)
         self.params = self.lm.init(jax.random.key(0))
         self._prefill = jax.jit(
             lambda p, b, ml: self.lm.prefill(p, b, max_len=ml),
@@ -99,11 +128,72 @@ class Server:
         stats.batches += 1
         stats.requests += len(batch)
 
+    def kv_trace(self, batches: List[List[Request]]):
+        """Modeled KV-cache access stream of the batched-decode plan.
+
+        Per batch: prefill appends every prompt token's KV page at the
+        admission instant (the batch's last arrival); each lockstep
+        decode step ``s`` then appends the new token's page and reads
+        the latest context page plus one strided cold page,
+        ``decode_interval_cycles`` apart. Requests keep their tenant as
+        the controller port, so the stream is exactly what
+        ``MemoryController.simulate`` arbitrates between tenants.
+        Returns ``(pe_id, rows, rw, arrival_cycle)`` in arrival order.
+        """
+        pe: List[int] = []
+        rows: List[int] = []
+        rw: List[int] = []
+        arr: List[float] = []
+
+        def emit(r, row, is_write, t):
+            pe.append(r.tenant)
+            rows.append(row)
+            rw.append(is_write)
+            arr.append(t)
+
+        for batch in batches:
+            base = float(max(r.arrival_cycle for r in batch))
+            for r in batch:
+                s0 = len(r.prompt)
+                kv0 = r.rid * (s0 + r.max_new_tokens + 8)
+                for p in range(s0):         # prefill: write prompt KV
+                    emit(r, kv0 + p, 1, base)
+                for s in range(r.max_new_tokens):
+                    t = base + (s + 1) * self.decode_interval_cycles
+                    emit(r, kv0 + s0 + s, 1, t)        # append new page
+                    emit(r, kv0 + s0 + s - 1, 0, t)    # latest context
+                    emit(r, kv0 + (s * 7) % max(1, s0), 0, t)  # cold page
+        order = np.argsort(np.asarray(arr, np.float64), kind="stable")
+        return (np.asarray(pe, np.int64)[order],
+                np.asarray(rows, np.int64)[order],
+                np.asarray(rw, np.int32)[order],
+                np.asarray(arr, np.float64)[order])
+
+    def model_memory(self, batches: List[List[Request]],
+                     stats: ServeStats) -> None:
+        """Replay the KV stream through the memory controller's
+        open-loop serving pipeline and record modeled latency."""
+        pe, rows, rw, arr = self.kv_trace(batches)
+        if rows.size == 0:
+            return
+        res = self.controller.simulate(
+            pe, rows, rw, KV_PAGE_BYTES,
+            arbiter_policy=self.arb_policy, weights=self.arb_weights,
+            arrival_cycle=arr, open_loop=True)
+        s = res.serving
+        stats.modeled_p50_cycles = s.p50_sojourn
+        stats.modeled_p95_cycles = s.p95_sojourn
+        stats.modeled_p99_cycles = s.p99_sojourn
+        stats.modeled_makespan_cycles = res.makespan_fpga_cycles
+        stats.modeled_per_tenant = s.per_port
+
     def serve(self, requests: List[Request]) -> ServeStats:
         stats = ServeStats()
         t0 = time.time()
-        for batch in self.admit(requests):
+        batches = self.admit(requests)
+        for batch in batches:
             self.run_batch(batch, stats)
+        self.model_memory(batches, stats)
         stats.wall_s = time.time() - t0
         return stats
 
@@ -130,6 +220,10 @@ def main() -> None:
     print(f"[serve] {stats.requests} requests in {stats.batches} batches, "
           f"{stats.decode_steps} decode steps, "
           f"{stats.prefill_tokens} prefill tokens, {stats.wall_s:.1f}s")
+    print(f"[serve] modeled KV latency (FPGA cycles): "
+          f"p50={stats.modeled_p50_cycles:.1f} "
+          f"p95={stats.modeled_p95_cycles:.1f} "
+          f"p99={stats.modeled_p99_cycles:.1f}")
     print(f"[serve] sample output: {reqs[0].output}")
 
 

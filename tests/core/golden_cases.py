@@ -94,9 +94,91 @@ CASES: dict = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Open-loop serving cases (PR 6): arrival-stamped streams through the
+# serving datapath. Arrival processes come from ``repro.data.synthetic``
+# which, like the traces above, draws only bit-generator primitives — the
+# stamps are stream-stable across numpy releases.
+# ---------------------------------------------------------------------------
+
+N_SERVING = 3000
+
+
+def _poisson_serving(seed: int = 3, n: int = N_SERVING):
+    """Single-tenant Zipf-popular reads/writes arriving Poisson at a
+    load near the knee of the frfcfs service curve."""
+    from repro.data.synthetic import poisson_arrivals
+    rng = np.random.default_rng(seed)
+    rows = _powerlaw_rows(rng, n, 8192)
+    rw = (rng.random(n) < 0.1).astype(np.int32)
+    arr = poisson_arrivals(rng, n, 0.05)
+    return rows, rw, None, arr
+
+
+def _hog_victim_serving(seed: int = 4):
+    """Two-tenant isolation stream: sparse SLO reads vs a bursty
+    sequential hog (see ``repro.data.synthetic.hog_victim_workload``)."""
+    from repro.data.synthetic import hog_victim_workload
+    rows, rw, pe, arr = hog_victim_workload(
+        np.random.default_rng(seed), n_victim=600, n_hog=2400,
+        victim_rate=0.01, hog_rate=0.12)
+    return rows, rw, pe, arr
+
+
+# name -> (config, workload builder, arbiter policy, weights)
+SERVING_CASES: dict = {
+    "serving_poisson_frfcfs": (
+        dataclasses.replace(_SCHED_OFF,
+                            dram_sched=DRAMSchedConfig(
+                                policy="frfcfs", reorder_window=16,
+                                t_rfc=420, t_refi=9363)),
+        _poisson_serving, "round_robin", None),
+    "serving_hog_victim_weighted": (
+        dataclasses.replace(_SCHED_OFF, num_pes=2,
+                            dram_sched=DRAMSchedConfig(
+                                policy="frfcfs_cap", reorder_window=32,
+                                starvation_cap=8, t_rfc=420,
+                                t_refi=9363)),
+        _hog_victim_serving, "weighted", (4, 1)),
+}
+
+
+def _serving_record(name: str) -> dict:
+    config, workload, arb_policy, weights = SERVING_CASES[name]
+    rows, rw, pe, arr = workload()
+    res = MemoryController(config).simulate(
+        pe, rows, rw, ROW_BYTES, arbiter_policy=arb_policy,
+        weights=weights, arrival_cycle=arr)
+    agg = res.as_channel_result()
+    s = res.serving
+    return {
+        "n_requests": res.n_requests,
+        "makespan_fpga_cycles": res.makespan_fpga_cycles,
+        "dram_makespan_fpga_cycles": res.dram_makespan_fpga_cycles,
+        "row_hits": agg.row_hits,
+        "row_conflicts": agg.row_conflicts,
+        "first_accesses": agg.first_accesses,
+        "p50_sojourn": s.p50_sojourn,
+        "p95_sojourn": s.p95_sojourn,
+        "p99_sojourn": s.p99_sojourn,
+        "mean_sojourn": s.mean_sojourn,
+        "worst_sojourn": s.worst_sojourn,
+        "sustained_req_per_cycle": s.sustained_req_per_cycle,
+        "offered_req_per_cycle": s.offered_req_per_cycle,
+        "idle_fpga_cycles": s.idle_fpga_cycles,
+        # JSON keys are strings — stringify ports so the round-trip
+        # compares equal in the checking test
+        "per_tenant": {str(p): rec for p, rec in s.per_port.items()},
+        "stage_requests": {st.name: [st.in_requests, st.out_requests]
+                           for st in res.stages},
+    }
+
+
 def golden_record(name: str) -> dict:
     """Run one case through ``MemoryController.simulate`` and flatten
     the full ``PipelineResult`` view into a JSON-stable record."""
+    if name in SERVING_CASES:
+        return _serving_record(name)
     config, trace, multiport = CASES[name]
     rows, rw = trace()
     pe = None

@@ -114,3 +114,38 @@ def test_tune_default_grid_unchanged(trace):
     assert all("dsched=fifo:1" in d for d, _ in res.table)
     assert res.config.dram_sched == \
         MemoryControllerConfig().dram_sched
+
+
+def test_tune_serving_constrained_selection():
+    """tune_serving searches arbiter x scheduler QoS knobs: the winner
+    comes from the grid, every candidate is tabulated, and a feasible
+    SLO target flips the objective from p99-min to makespan-min among
+    feasible candidates."""
+    from repro.core.autotune import tune_serving
+    from repro.data.synthetic import hog_victim_workload
+
+    rows, rw, pe, arr = hog_victim_workload(
+        np.random.default_rng(7), n_victim=200, n_hog=800,
+        victim_rate=0.02, hog_rate=0.2)
+    res = tune_serving(rows, rw, pe, arr, 4096, num_ports=2,
+                       arb_policies=("round_robin", "weighted"),
+                       weight_ratios=(4,),
+                       dram_sched_policies=("frfcfs", "frfcfs_cap"),
+                       reorder_windows=(16,), starvation_caps=(8,))
+    # 2 arb x 2 sched candidates, all tabulated
+    assert res.candidates_evaluated == len(res.table) == 4
+    assert res.arb_policy in ("round_robin", "weighted")
+    assert res.config.dram_sched.policy in ("frfcfs", "frfcfs_cap")
+    assert res.slo_p99_cycles > 0 and res.makespan_cycles > 0
+    # no target: objective is the SLO port's p99 outright
+    assert not res.feasible
+    assert res.slo_p99_cycles == min(p for _, p, _ in res.table)
+    # a generous target makes every candidate feasible -> makespan-min
+    res2 = tune_serving(rows, rw, pe, arr, 4096, num_ports=2,
+                        slo_p99_cycles=1e12,
+                        arb_policies=("round_robin", "weighted"),
+                        weight_ratios=(4,),
+                        dram_sched_policies=("frfcfs", "frfcfs_cap"),
+                        reorder_windows=(16,), starvation_caps=(8,))
+    assert res2.feasible
+    assert res2.makespan_cycles == min(m for _, _, m in res2.table)

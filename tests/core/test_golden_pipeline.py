@@ -19,7 +19,8 @@ import os
 
 import pytest
 
-from golden_cases import CASES, GOLDEN_DIR, golden_record
+from golden_cases import (CASES, GOLDEN_DIR, SERVING_CASES,
+                          golden_record)
 
 _REGEN = ("snapshot mismatch for {name!r} at key {key!r}:\n"
           "  golden:   {want!r}\n"
@@ -37,7 +38,7 @@ def _load(name: str) -> dict:
         return json.load(f)
 
 
-@pytest.mark.parametrize("name", sorted(CASES))
+@pytest.mark.parametrize("name", sorted(CASES) + sorted(SERVING_CASES))
 def test_golden_snapshot(name):
     golden = _load(name)
     got = golden_record(name)
@@ -53,7 +54,7 @@ def test_goldens_have_no_strays():
     files would silently stop being checked)."""
     on_disk = {f[:-5] for f in os.listdir(GOLDEN_DIR)
                if f.endswith(".json")}
-    assert on_disk == set(CASES)
+    assert on_disk == set(CASES) | set(SERVING_CASES)
 
 
 def test_golden_frfcfs_beats_fifo_on_record():
@@ -74,3 +75,31 @@ def test_golden_frfcfs_beats_fifo_on_record():
     fifo = MemoryController(fifo_cfg).simulate(
         None, rows, rw, golden_cases.ROW_BYTES)
     assert frfcfs["makespan_fpga_cycles"] < fifo.makespan_fpga_cycles
+
+
+def test_golden_serving_isolation_on_record():
+    """The pinned hog-vs-victim snapshot witnesses the PR-6 acceptance
+    criterion: under weighted arbitration + starvation cap, the SLO
+    tenant's p99 sojourn stays well under the hog's, and the recomputed
+    unprotected reference (round_robin + uncapped FR-FCFS — the arbiter
+    splits grants evenly and hog row-hits may starve the victim's
+    conflicts) is strictly worse for the victim on the same stream."""
+    import dataclasses
+
+    import golden_cases
+    from repro.core.config import DRAMSchedConfig
+    from repro.core.controller import MemoryController
+
+    rec = _load("serving_hog_victim_weighted")
+    victim, hog = rec["per_tenant"]["0"], rec["per_tenant"]["1"]
+    assert victim["p99_sojourn"] * 3 < hog["p99_sojourn"]
+    cfg, workload, _, _ = golden_cases.SERVING_CASES[
+        "serving_hog_victim_weighted"]
+    uncapped = dataclasses.replace(
+        cfg, dram_sched=dataclasses.replace(cfg.dram_sched,
+                                            policy="frfcfs"))
+    rows, rw, pe, arr = workload()
+    rr = MemoryController(uncapped).simulate(
+        pe, rows, rw, golden_cases.ROW_BYTES,
+        arbiter_policy="round_robin", arrival_cycle=arr)
+    assert victim["p99_sojourn"] < rr.serving.per_port[0]["p99_sojourn"]

@@ -1,0 +1,95 @@
+"""Serving driver (launch/serve.py) — smoke + tenant-isolation regression.
+
+The serve driver now replays its batched-decode KV access stream through
+``MemoryController.simulate`` in open-loop mode (ARCHITECTURE §9), so a
+serve run reports modeled memory sojourns per tenant. These tests pin:
+
+* the smoke path populates the modeled stats (finite, ordered
+  percentiles, one per-tenant record per issuing tenant);
+* the isolation property the serving stack exists for — with a
+  bandwidth-hog tenant sharing the controller, weighted arbitration
+  protects the SLO tenant's p99 where round_robin does not.
+
+Model forward passes are real (smoke-sized) jitted JAX; keep sizes tiny.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.config import MemoryControllerConfig
+from repro.launch.serve import Request, Server
+
+
+def _requests(rng, *, n_victim=4, n_hog=8, victim_prompt=8, hog_prompt=48,
+              hog_new=24):
+    """Victim tenant 0: short sparse prompts. Hog tenant 1: long prompts
+    + deep decode arriving in a burst — the KV stream it induces floods
+    the shared controller."""
+    reqs = []
+    for i in range(n_victim):
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, 250, victim_prompt)
+            .astype(np.int32),
+            max_new_tokens=4, arrival_cycle=i * 40, tenant=0))
+    for j in range(n_hog):
+        reqs.append(Request(
+            rid=100 + j, prompt=rng.integers(0, 250, hog_prompt)
+            .astype(np.int32),
+            max_new_tokens=hog_new, arrival_cycle=j, tenant=1))
+    return reqs
+
+
+def _serve(arb_policy, weights, reqs):
+    server = Server("h2o-danube-1.8b", smoke=True,
+                    mem=MemoryControllerConfig(num_pes=2),
+                    arb_policy=arb_policy, arb_weights=weights,
+                    decode_interval_cycles=16)
+    return server.serve([Request(**r.__dict__) for r in reqs])
+
+
+def test_serve_smoke_reports_modeled_memory():
+    rng = np.random.default_rng(0)
+    stats = _serve("round_robin", None, _requests(rng))
+    assert stats.requests == 12 and stats.batches >= 1
+    assert stats.decode_steps > 0
+    assert 0 < stats.modeled_p50_cycles <= stats.modeled_p95_cycles \
+        <= stats.modeled_p99_cycles
+    assert stats.modeled_makespan_cycles >= stats.modeled_p99_cycles
+    assert set(stats.modeled_per_tenant) == {0, 1}
+    for t, rec in stats.modeled_per_tenant.items():
+        assert rec["n"] > 0
+        assert rec["p50_sojourn"] <= rec["p99_sojourn"]
+    # hog emits far more KV traffic than the victim
+    assert stats.modeled_per_tenant[1]["n"] > \
+        stats.modeled_per_tenant[0]["n"] * 3
+
+
+def test_weighted_arbitration_protects_victim_tenant():
+    """Tenant-isolation regression: same request set, same model, only
+    the arbiter differs. Weighted (favoring the SLO tenant) must give
+    the victim a strictly better modeled p99 than round_robin, which
+    splits grants evenly with the hog's flood."""
+    rng = np.random.default_rng(1)
+    reqs = _requests(rng)
+    rr = _serve("round_robin", None, reqs)
+    wt = _serve("weighted", [8, 1], reqs)
+    v_rr = rr.modeled_per_tenant[0]["p99_sojourn"]
+    v_wt = wt.modeled_per_tenant[0]["p99_sojourn"]
+    assert v_wt < v_rr, (v_wt, v_rr)
+    # the victim's traffic is identical either way — only service changed
+    assert rr.modeled_per_tenant[0]["n"] == wt.modeled_per_tenant[0]["n"]
+
+
+def test_serve_outputs_and_admission_unchanged():
+    """The memory model rides alongside the functional path — outputs
+    and batch formation must be identical with it active."""
+    rng = np.random.default_rng(2)
+    reqs = _requests(rng, n_victim=2, n_hog=2, hog_new=4)
+    stats = _serve("round_robin", None, reqs)
+    assert stats.requests == 4
+    # serve() filled outputs on its own copies; rerun on shared objects
+    server = Server("h2o-danube-1.8b", smoke=True,
+                    mem=MemoryControllerConfig(num_pes=2))
+    server.serve(reqs)
+    for r in reqs:
+        assert r.output is not None and len(r.output) == r.max_new_tokens
