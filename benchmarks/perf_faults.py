@@ -1,0 +1,219 @@
+"""RAS / fault-injection benchmark — what an error storm costs the
+victim tenant under each retry policy, and what graceful degradation
+buys (ARCHITECTURE §10).
+
+Stage 1 measures the fault-free capacity of the two-tenant serving
+configuration (the perf_serving methodology). Stage 2 is the acceptance
+sweep (ISSUE 7): escalating error rates x three retry policies on the
+same hog-vs-victim arrival stream —
+
+* ``bounded_backoff`` — SECDED + bounded replay (max 4 attempts) with
+  exponential backoff: a failing request leaves the bus between
+  attempts, so the storm's cost to the *victim tenant's p99* stays
+  bounded, at the price of dropping requests whose budget exhausts;
+* ``naive_retry``   — SECDED + immediate retry (no backoff, deep
+  budget): every hard error hammers the bus back-to-back and the
+  victim pays for it at high error rates;
+* ``no_ecc``        — detection off (``ecc="none"``, no write CRC):
+  nothing is replayed so nothing slows down, but every injected error
+  is *silent data corruption* — recorded so the timing win is never
+  mistaken for a free lunch.
+
+Machine-readable acceptance: ``bounded_beats_naive_victim_p99`` (at the
+top error rate) and ``no_ecc_fast_but_corrupts``. Stage 3 pins the
+degradation contract: a channel-outage run serves *slower* but drops
+*nothing* (``outage_served_slower_zero_drops``). Stage 4 records the
+fault engine's fast-path speedup over the request-at-a-time oracle.
+
+Writes ``BENCH_faults.json``; ``--small`` (~30k requests) is the CI
+perf-smoke configuration.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from benchmarks.perf_pipeline import ROW_BYTES
+from repro.core.config import (CacheConfig, DRAMSchedConfig, FaultConfig,
+                               MemoryControllerConfig, SchedulerConfig)
+from repro.core.controller import MemoryController
+from repro.core.timing import (DDR4_2400, simulate_faults,
+                               simulate_faults_seq)
+from repro.data.synthetic import hog_victim_workload, poisson_arrivals
+
+T_RFC, T_REFI = 420, 9363
+ERROR_RATES = (0.0005, 0.005, 0.02)
+
+BARE = MemoryControllerConfig(
+    scheduler=SchedulerConfig(enabled=False),
+    cache=CacheConfig(enabled=False))
+SERVICE = DRAMSchedConfig(policy="frfcfs_cap", reorder_window=32,
+                          starvation_cap=16, t_rfc=T_RFC, t_refi=T_REFI)
+
+# The storm shape shared by every policy: transient errors everywhere
+# plus hard-failed weak cells (every access errors). Hard failures are
+# the case the retry policy actually decides: immediate retry burns the
+# full replay budget back-to-back on the bus, bounded backoff spreads a
+# smaller budget out and then gives up.
+STORM_BASE = FaultConfig(seed=9, weak_row_fraction=0.02, weak_row_ber=1.0,
+                         due_fraction=1.0)
+
+POLICIES = {
+    "bounded_backoff": dict(max_replays=4, backoff_clocks=64),
+    "naive_retry": dict(max_replays=16, backoff_clocks=0),
+    "no_ecc": dict(ecc="none", write_crc=False),
+}
+
+
+def _simulate(cfg, pe, rows, rw, arr, *, policy="weighted",
+              weights=(4, 1), faults=None):
+    mc = MemoryController(cfg)
+    t0 = time.perf_counter()
+    res = mc.simulate(pe, rows, rw, ROW_BYTES, arbiter_policy=policy,
+                      weights=weights, arrival_cycle=arr, faults=faults)
+    return res, (time.perf_counter() - t0) * 1e6
+
+
+def run(n_requests: int = 120_000) -> dict:
+    n_victim = max(200, n_requests // 5)
+    n_hog = n_requests - n_victim
+    cfg = dataclasses.replace(BARE, dram_sched=SERVICE, num_pes=2)
+
+    # ---- stage 1: fault-free reference on the two-tenant stream ------
+    probe_rows, probe_rw, probe_pe, _ = hog_victim_workload(
+        np.random.default_rng(4), n_victim=n_victim, n_hog=n_hog,
+        victim_rate=1.0, hog_rate=1.0)
+    closed, dt = _simulate(cfg, probe_pe, probe_rows, probe_rw, None)
+    capacity = n_requests / closed.makespan_fpga_cycles
+    rows, rw, pe, arr = hog_victim_workload(
+        np.random.default_rng(4), n_victim=n_victim, n_hog=n_hog,
+        victim_rate=0.15 * capacity, hog_rate=0.75 * capacity)
+    clean, dt = _simulate(cfg, pe, rows, rw, arr)
+    clean_victim_p99 = clean.serving.per_port[0]["p99_sojourn"]
+    emit("perf_faults/clean_reference", dt,
+         f"capacity={capacity:.5f}req_per_cycle|"
+         f"victim_p99={clean_victim_p99:.1f}")
+
+    results: dict = {
+        "benchmark": "fault_storm_retry_policies",
+        "unit": "modeled_fpga_cycles",
+        "n_requests": n_requests,
+        "row_bytes": ROW_BYTES,
+        "service": {"policy": SERVICE.policy,
+                    "reorder_window": SERVICE.reorder_window,
+                    "starvation_cap": SERVICE.starvation_cap,
+                    "t_rfc": T_RFC, "t_refi": T_REFI},
+        "capacity_req_per_cycle": capacity,
+        "clean_victim_p99": round(clean_victim_p99, 1),
+        "error_rates": list(ERROR_RATES),
+        "sweep": {},
+    }
+
+    # ---- stage 2: error-rate x retry-policy sweep --------------------
+    for ber in ERROR_RATES:
+        row: dict = {}
+        for label, knobs in POLICIES.items():
+            fc = dataclasses.replace(STORM_BASE, transient_ber=ber,
+                                     **knobs)
+            res, dt = _simulate(cfg, pe, rows, rw, arr, faults=fc)
+            st = res.fault
+            per = res.serving.per_port
+            row[label] = {
+                "victim_p99": round(per[0]["p99_sojourn"], 1),
+                "hog_p99": round(per[1]["p99_sojourn"], 1),
+                "n_injected": st.n_injected,
+                "n_corrected": st.n_corrected,
+                "n_replays": st.n_replays,
+                "n_dropped": st.n_dropped,
+                "n_silent": st.n_silent,
+                "replay_dram_cycles": st.replay_dram_cycles,
+                "makespan": round(res.makespan_fpga_cycles, 1),
+            }
+            emit(f"perf_faults/ber{ber:g}_{label}", dt,
+                 f"victim_p99={row[label]['victim_p99']}|"
+                 f"replays={st.n_replays}|dropped={st.n_dropped}|"
+                 f"silent={st.n_silent}")
+        results["sweep"][f"{ber:g}"] = row
+
+    top = results["sweep"][f"{ERROR_RATES[-1]:g}"]
+    results["bounded_beats_naive_victim_p99"] = bool(
+        top["bounded_backoff"]["victim_p99"]
+        < top["naive_retry"]["victim_p99"])
+    results["no_ecc_fast_but_corrupts"] = bool(
+        top["no_ecc"]["victim_p99"]
+        <= top["bounded_backoff"]["victim_p99"]
+        and top["no_ecc"]["n_silent"] > 0
+        and top["bounded_backoff"]["n_silent"] == 0)
+
+    # ---- stage 3: channel outage degrades gracefully -----------------
+    span = float(arr.max())
+    outage = FaultConfig(seed=9, outage_windows=(
+        (0, int(0.2 * span), int(0.45 * span)),))
+    deg, dt = _simulate(cfg, pe, rows, rw, arr, faults=outage)
+    results["outage"] = {
+        "window_dram_clocks": [int(0.2 * span), int(0.45 * span)],
+        "outage_dram_cycles": round(deg.fault.outage_dram_cycles, 1),
+        "clean_p99": round(clean.serving.p99_sojourn, 1),
+        "outage_p99": round(deg.serving.p99_sojourn, 1),
+        "clean_makespan": round(clean.makespan_fpga_cycles, 1),
+        "outage_makespan": round(deg.makespan_fpga_cycles, 1),
+        "n_dropped": deg.fault.n_dropped,
+    }
+    results["outage_served_slower_zero_drops"] = bool(
+        deg.serving.p99_sojourn > clean.serving.p99_sojourn
+        and deg.makespan_fpga_cycles >= clean.makespan_fpga_cycles
+        and deg.fault.n_dropped == 0)
+    emit("perf_faults/channel_outage", dt,
+         f"p99={results['outage']['outage_p99']}"
+         f"(clean={results['outage']['clean_p99']})|dropped=0")
+
+    # ---- stage 4: fault engine fast path vs oracle -------------------
+    n_perf = min(15_000, n_requests)
+    fc = dataclasses.replace(STORM_BASE, transient_ber=0.005,
+                             max_replays=4, backoff_clocks=64)
+    addrs = rows[:n_perf] * ROW_BYTES
+    arr_p = poisson_arrivals(np.random.default_rng(5), n_perf,
+                             capacity * 0.8)
+    t0 = time.perf_counter()
+    oracle = simulate_faults_seq(addrs, DDR4_2400, SERVICE,
+                                 rw=rw[:n_perf], faults=fc,
+                                 arrival_fpga=arr_p)
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fast = simulate_faults(addrs, DDR4_2400, SERVICE, rw=rw[:n_perf],
+                           faults=fc, arrival_fpga=arr_p)
+    t_fast = time.perf_counter() - t0
+    assert fast.total_fpga_cycles == oracle.total_fpga_cycles
+    assert fast.fault.as_dict() == oracle.fault.as_dict()
+    results["simulator"] = {
+        "n": n_perf,
+        "oracle_s": round(t_seq, 3),
+        "fast_s": round(t_fast, 3),
+        "speedup": round(t_seq / t_fast, 1),
+    }
+    emit("perf_faults/simulator_fast_vs_oracle", t_fast * 1e6,
+         f"speedup={t_seq / t_fast:.1f}x|n={n_perf}")
+
+    write_bench_json("faults", results)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--small", action="store_true",
+                    help="CI perf-smoke size (~30k requests)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="override trace length")
+    args = ap.parse_args()
+    n = args.n or (30_000 if args.small else 120_000)
+    print("name,us_per_call,derived")
+    run(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,8 +18,8 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.config import (CacheConfig, ChannelConfig, DMAConfig,
-                               DRAMSchedConfig, MemoryControllerConfig,
-                               SchedulerConfig)
+                               DRAMSchedConfig, FaultConfig,
+                               MemoryControllerConfig, SchedulerConfig)
 from repro.core.pipeline import (PipelineContext, RequestStream,
                                  default_stages, run_pipeline)
 from repro.core.timing import DRAMTimings, DDR4_2400
@@ -157,6 +157,7 @@ class ServingTuneResult:
     feasible: bool               # met the SLO target (if one was given)
     candidates_evaluated: int
     table: list                  # (summary, slo_p99, makespan) per candidate
+    n_dropped: int = 0           # replay-exhausted drops of the winner
 
 
 def _score_serving(cfg, row_ids, rw, pe_id, arrival, row_bytes, *,
@@ -187,6 +188,9 @@ def tune_serving(
     dram_sched_policies: Sequence[str] = ("frfcfs", "frfcfs_cap"),
     reorder_windows: Sequence[int] = (16, 32),
     starvation_caps: Sequence[int] = (8, 16),
+    faults: FaultConfig | None = None,
+    max_replays_grid: Sequence[int] = (2, 4, 8),
+    backoff_grid: Sequence[int] = (8, 32, 128),
     timings: DRAMTimings = DDR4_2400,
 ) -> ServingTuneResult:
     """Tune the QoS knobs for an open-loop multi-tenant trace.
@@ -199,6 +203,18 @@ def tune_serving(
     in ``weight_ratios`` (other ports weight 1); ``frfcfs_cap``
     candidates sweep the starvation cap, the knob that bounds how long
     a reorder window may defer the SLO tenant's misses.
+
+    Passing ``faults`` (an *active* :class:`FaultConfig`, i.e. an error
+    storm to survive) adds the **retry-policy axis**: every arbitration
+    × scheduler candidate is additionally swept over
+    ``max_replays_grid`` × ``backoff_grid`` (replacing the seed
+    config's ``max_replays`` / ``backoff_clocks``). Feasibility then
+    also requires **zero replay-exhausted drops** — a dropped request
+    has no real completion, so a config that meets the p99 target by
+    giving up on requests is not meeting the SLO. Within that, the
+    usual order applies: too few replays drops requests (infeasible),
+    too many replays of a hard-failing cell burns bus time that the
+    victim tenant's p99 pays for — the sweep finds the bounded middle.
     """
     row_ids = np.asarray(row_ids)
     arb_grid: list[tuple[str, tuple | None]] = []
@@ -214,36 +230,51 @@ def tune_serving(
         (pol, win, cap if pol == "frfcfs_cap" else 0)
         for pol in dram_sched_policies for win in reorder_windows
         for cap in (starvation_caps if pol == "frfcfs_cap" else (0,))})
+    fault_grid: list[FaultConfig | None] = [None]
+    if faults is not None and faults.active:
+        fault_grid = [dataclasses.replace(faults, max_replays=mr,
+                                          backoff_clocks=bo)
+                      for mr in sorted(set(max_replays_grid))
+                      for bo in sorted(set(backoff_grid))]
 
     best = None          # (feasible, key, result row)
     table = []
     n_eval = 0
     for (apol, w) in arb_grid:
         for (spol, win, cap) in sched_grid:
-            cfg = MemoryControllerConfig(
-                dram_sched=DRAMSchedConfig(
-                    policy=spol, reorder_window=win,
-                    starvation_cap=cap or 16))
-            res = _score_serving(cfg, row_ids, rw, pe_id, arrival_cycle,
-                                 row_bytes, num_ports=num_ports,
-                                 policy=apol, weights=w, timings=timings)
-            port = res.serving.per_port.get(slo_port)
-            p99 = float(port["p99_sojourn"]) if port else 0.0
-            mk = res.makespan_fpga_cycles
-            n_eval += 1
-            feasible = (slo_p99_cycles is None or p99 <= slo_p99_cycles)
-            table.append((f"arb={apol}{list(w) if w else ''} "
-                          f"dsched={spol}:{win}"
-                          + (f":cap{cap}" if cap else ""), p99, mk))
-            # constrained order: feasible beats infeasible; within
-            # feasible minimize makespan, within infeasible minimize p99
-            key = (0, mk, p99) if feasible else (1, p99, mk)
-            if best is None or key < best[0]:
-                best = (key, cfg, apol, w, p99, mk, feasible)
+            for fc in fault_grid:
+                cfg = MemoryControllerConfig(
+                    dram_sched=DRAMSchedConfig(
+                        policy=spol, reorder_window=win,
+                        starvation_cap=cap or 16),
+                    faults=fc)
+                res = _score_serving(cfg, row_ids, rw, pe_id,
+                                     arrival_cycle, row_bytes,
+                                     num_ports=num_ports, policy=apol,
+                                     weights=w, timings=timings)
+                port = res.serving.per_port.get(slo_port)
+                p99 = float(port["p99_sojourn"]) if port else 0.0
+                mk = res.makespan_fpga_cycles
+                drops = res.fault.n_dropped if res.fault is not None else 0
+                n_eval += 1
+                feasible = (slo_p99_cycles is None
+                            or p99 <= slo_p99_cycles) and drops == 0
+                table.append((f"arb={apol}{list(w) if w else ''} "
+                              f"dsched={spol}:{win}"
+                              + (f":cap{cap}" if cap else "")
+                              + (f" retry={fc.max_replays}"
+                                 f"/bo{fc.backoff_clocks}" if fc else ""),
+                              p99, mk))
+                # constrained order: feasible beats infeasible; within
+                # feasible minimize makespan, within infeasible drops
+                # dominate (a drop is an unserved request), then p99
+                key = (0, mk, p99) if feasible else (1, drops, p99, mk)
+                if best is None or key < best[0]:
+                    best = (key, cfg, apol, w, p99, mk, feasible, drops)
     assert best is not None
-    _, cfg, apol, w, p99, mk, feasible = best
+    _, cfg, apol, w, p99, mk, feasible, drops = best
     return ServingTuneResult(
         config=cfg, arb_policy=apol, weights=w,
         slo_p99_cycles=p99, makespan_cycles=mk,
         feasible=feasible and slo_p99_cycles is not None,
-        candidates_evaluated=n_eval, table=table)
+        candidates_evaluated=n_eval, table=table, n_dropped=drops)

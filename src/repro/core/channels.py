@@ -78,12 +78,27 @@ class AddressMap:
     config: ChannelConfig
     timings: DRAMTimings = dataclasses.field(
         default_factory=lambda: DDR4_2400)
+    #: RAS config (``faults.failed_channels`` re-maps a failed
+    #: channel's traffic onto the survivors — ARCHITECTURE §10).
+    faults: "object | None" = None
 
     @property
     def granularity(self) -> int:
         if self.config.policy == "row_interleave":
             return self.timings.row_bytes
         return self.config.interleave_bytes
+
+    @property
+    def failed_channels(self) -> tuple[int, ...]:
+        if self.faults is None:
+            return ()
+        return tuple(sorted(self.faults.failed_channels))
+
+    @property
+    def surviving_channels(self) -> tuple[int, ...]:
+        dead = set(self.failed_channels)
+        return tuple(c for c in range(self.config.num_channels)
+                     if c not in dead)
 
     def _fold(self, block: np.ndarray) -> np.ndarray:
         """XOR-fold every log2(c)-bit digit of ``block`` into one digit.
@@ -101,7 +116,7 @@ class AddressMap:
             folded ^= block >> shift
         return (folded & (c - 1)).astype(np.int64)
 
-    def channel_of(self, addr) -> np.ndarray:
+    def _natural_channel(self, addr) -> np.ndarray:
         addr = np.asarray(addr, dtype=np.int64)
         c = self.config.num_channels
         if c == 1:
@@ -115,9 +130,46 @@ class AddressMap:
             return self._fold(block)
         return (block % c).astype(np.int64)
 
+    def channel_of(self, addr) -> np.ndarray:
+        ch = self._natural_channel(addr)
+        failed = self.failed_channels
+        if not failed:
+            return ch
+        # Failed-channel degradation: a dead channel's blocks spread
+        # round-robin over the survivors (by natural block index), so
+        # the re-homed traffic shares every surviving channel's
+        # bandwidth instead of doubling up on one.
+        addr = np.asarray(addr, dtype=np.int64)
+        block = addr // self.granularity
+        surv = np.asarray(self.surviving_channels, np.int64)
+        out = ch.copy()
+        for f in failed:
+            m = ch == f
+            if m.any():
+                out[m] = surv[block[m] % surv.size]
+        return out
+
     def local_addr(self, addr) -> np.ndarray:
         """Address within the owning channel (channel-select field
-        removed). Dense per channel; keeps sub-block offsets."""
+        removed). Dense per channel; keeps sub-block offsets. Re-homed
+        traffic from a failed channel lands in a reserved region of the
+        survivor's space (``REMAP_LOCAL_BASE`` per failed channel) —
+        distinct rows from the survivor's native traffic, preserving
+        the ``addr ↔ (channel, local_addr)`` bijection."""
+        local = self._natural_local(addr)
+        failed = self.failed_channels
+        if not failed:
+            return local
+        from repro.core.faults import REMAP_LOCAL_BASE
+        ch = self._natural_channel(addr)
+        out = local.copy()
+        for i, f in enumerate(failed):
+            m = ch == f
+            if m.any():
+                out[m] = (i + 1) * REMAP_LOCAL_BASE + local[m]
+        return out
+
+    def _natural_local(self, addr) -> np.ndarray:
         addr = np.asarray(addr, dtype=np.int64)
         c = self.config.num_channels
         if c == 1:
@@ -125,14 +177,7 @@ class AddressMap:
         g = self.granularity
         return (addr // g // c) * g + addr % g
 
-    def global_addr(self, channel, local) -> np.ndarray:
-        """Inverse of the bijection: recompose ``(channel, local_addr)``
-        into the flat physical address. For the XOR policy the low block
-        digit is recovered as ``channel XOR fold(group)`` — the fold of
-        ``block = group*c + d`` is ``d XOR fold(group)``, so the XOR
-        cancels. Used by the pipeline's CacheFilter to give victim
-        write-backs a real physical address; round-trip property-tested.
-        """
+    def _natural_global(self, channel, local) -> np.ndarray:
         channel = np.asarray(channel, dtype=np.int64)
         local = np.asarray(local, dtype=np.int64)
         c = self.config.num_channels
@@ -145,6 +190,32 @@ class AddressMap:
         else:
             low = channel
         return (group * c + low) * g + offset
+
+    def global_addr(self, channel, local) -> np.ndarray:
+        """Inverse of the bijection: recompose ``(channel, local_addr)``
+        into the flat physical address. For the XOR policy the low block
+        digit is recovered as ``channel XOR fold(group)`` — the fold of
+        ``block = group*c + d`` is ``d XOR fold(group)``, so the XOR
+        cancels. A re-homed local (>= ``REMAP_LOCAL_BASE``) encodes
+        which failed channel it came from, so the natural address is
+        recovered from that channel, ignoring the survivor it was
+        served on. Used by the pipeline's CacheFilter to give victim
+        write-backs a real physical address; round-trip property-tested.
+        """
+        failed = self.failed_channels
+        if not failed:
+            return self._natural_global(channel, local)
+        from repro.core.faults import REMAP_LOCAL_BASE
+        channel = np.asarray(channel, dtype=np.int64)
+        local = np.asarray(local, dtype=np.int64)
+        remapped = local >= REMAP_LOCAL_BASE
+        if not remapped.any():
+            return self._natural_global(channel, local)
+        fidx = np.clip(local // REMAP_LOCAL_BASE - 1, 0, len(failed) - 1)
+        failed_arr = np.asarray(failed, np.int64)
+        nat_ch = np.where(remapped, failed_arr[fidx], channel)
+        nat_local = np.where(remapped, local % REMAP_LOCAL_BASE, local)
+        return self._natural_global(nat_ch, nat_local)
 
     def decompose(self, addr):
         """``(channel, bank, row)`` of each address."""
@@ -697,6 +768,13 @@ class ServingChannelResult(ChannelSimResult):
     arrival_fpga_cycles: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, np.float64))
     idle_fpga_cycles: float = 0.0
+    #: aggregated :class:`repro.core.faults.FaultStats` over channels
+    #: (``None`` on fault-free runs).
+    fault: "object | None" = None
+    #: per-request dropped flags (input trace order; all-False without
+    #: faults).
+    dropped: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, bool))
 
     @property
     def sojourn_fpga_cycles(self) -> np.ndarray:
@@ -716,6 +794,7 @@ def simulate_serving_channels(
     channel_cfg: ChannelConfig = ChannelConfig(),
     dram_sched: DRAMSchedConfig | None = None,
     use_seq_oracle: bool = False,
+    faults=None,
 ) -> ServingChannelResult:
     """Arrival-aware front end: map → per-channel coupled
     admission+service (:func:`repro.core.timing.simulate_arrivals`) →
@@ -728,10 +807,19 @@ def simulate_serving_channels(
     request-at-a-time spec ``simulate_arrivals_seq`` — the two are
     bit-identical (property-tested), and with all-zero arrivals both
     degenerate to the closed-loop arbiter + scheduler results.
-    """
-    from repro.core.timing import simulate_arrivals
 
-    amap = AddressMap(channel_cfg, timings)
+    ``faults`` (a :class:`repro.core.config.FaultConfig`) turns on the
+    RAS layer: the address map re-homes failed channels' traffic onto
+    survivors, each surviving channel runs the fault-injected service
+    (:func:`repro.core.timing.simulate_faults`, keyed by its channel
+    index so storms are independent per channel), and the per-channel
+    :class:`~repro.core.faults.FaultStats` aggregate into ``fault``.
+    ``faults=None`` (or an inactive config) is bit-identical to the
+    fault-free walk.
+    """
+    from repro.core.timing import simulate_arrivals, simulate_faults
+
+    amap = AddressMap(channel_cfg, timings, faults)
     addrs = np.asarray(addrs, dtype=np.int64).ravel()
     n = addrs.shape[0]
     arr = np.zeros(n, np.float64) if arrival_fpga is None \
@@ -749,16 +837,26 @@ def simulate_serving_channels(
     idle = 0.0
     grants = np.zeros(num_ports or 1, np.int64)
     stalls = np.zeros(num_ports or 1, np.int64)
+    fault_agg = None
+    dropped = np.zeros(n, bool)
     for k in range(channel_cfg.num_channels):
         sel = np.flatnonzero(ch == k)       # stable: keeps trace order
-        res = simulate_arrivals(
-            local[sel], timings,
-            dram_sched if dram_sched is not None else DRAMSchedConfig(),
+        sub = dict(
             rw=None if rw_arr is None else rw_arr[sel],
             arrival_fpga=arr[sel],
             pe_id=None if pe is None else pe[sel],
             num_ports=num_ports, arb_policy=policy, weights=weights,
             engine=engine)
+        sched_k = dram_sched if dram_sched is not None \
+            else DRAMSchedConfig()
+        if faults is None:
+            res = simulate_arrivals(local[sel], timings, sched_k, **sub)
+        else:
+            res = simulate_faults(local[sel], timings, sched_k,
+                                  faults=faults, channel=k, **sub)
+            dropped[sel] = res.dropped if res.dropped.size else False
+            fault_agg = res.fault if fault_agg is None \
+                else fault_agg.combine(res.fault)
         completion[sel] = res.completion_fpga_cycles
         service[sel] = res.service_dram_cycles * timings.clock_ratio
         idle += res.idle_dram_cycles * timings.clock_ratio
@@ -781,4 +879,6 @@ def simulate_serving_channels(
         completion_fpga_cycles=completion + fill,
         service_fpga_cycles=service,
         arrival_fpga_cycles=arr,
-        idle_fpga_cycles=idle)
+        idle_fpga_cycles=idle,
+        fault=fault_agg,
+        dropped=dropped)

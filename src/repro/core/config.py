@@ -206,6 +206,147 @@ class DRAMSchedConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """RAS / fault-injection parameters (the controller's reliability
+    back end — ARCHITECTURE.md §10).
+
+    Real DDR4/HBM parts ship ECC, write-CRC retry and refresh-rate
+    escalation because the controller must keep serving through faults;
+    this config drives a *deterministic, seeded* fault model on the DRAM
+    service stream plus the controller's response policies. All
+    injection is a pure function of ``(seed, channel, request index,
+    attempt)`` — re-running a trace reproduces the same storm
+    bit-for-bit.
+
+    Injection knobs:
+      ``transient_ber``      — per-access transient error probability;
+      ``weak_row_fraction``  — fraction of DRAM rows that are weak
+                               (chosen by a seeded hash of the row id);
+      ``weak_row_ber``       — *additional* per-access error
+                               probability on weak rows (hot spots);
+      ``outage_windows``     — ``(channel, start, end)`` intervals in
+                               DRAM clocks during which that channel
+                               cannot issue (transient outage: pending
+                               work stalls, nothing is dropped);
+      ``failed_channels``    — channels failed for the whole run; the
+                               ``AddressMap`` re-maps their traffic to
+                               the surviving channels.
+
+    Error-handling knobs:
+      ``ecc``                — "secded" detects every injected error
+                               and corrects the non-DUE ones at
+                               ``ecc_correction_clocks`` per corrected
+                               access; "none" makes read errors silent;
+      ``due_fraction``       — fraction of detected errors that exceed
+                               SECDED correction (reads only) and must
+                               be replayed;
+      ``write_crc``          — when True, errored writes fail the link
+                               CRC and replay; when False they are
+                               silent corruption;
+      ``max_replays``        — bound on replays per request; a request
+                               whose last allowed attempt still errors
+                               is counted *dropped* (surfaced in
+                               ``FaultStats``, never silently lost);
+      ``backoff_clocks``     — base replay backoff in DRAM clocks,
+                               doubling per failed attempt
+                               (``backoff << (attempt-1)``); 0 replays
+                               immediately (the naive policy).
+
+    Degradation knobs:
+      ``row_retire_threshold``     — errors charged to one row before
+                                     it is retired to a spare (0 off);
+      ``max_retired_rows``         — spare rows per channel;
+      ``refresh_escalate_threshold`` — injected errors per escalation
+                                     level: each level halves the
+                                     effective ``t_refi`` (0 off);
+      ``refresh_escalate_max``     — cap on escalation levels.
+    """
+
+    seed: int = 0
+    transient_ber: float = 0.0
+    weak_row_fraction: float = 0.0
+    weak_row_ber: float = 0.0
+    due_fraction: float = 0.0
+    ecc: str = "secded"
+    ecc_correction_clocks: int = 4
+    write_crc: bool = True
+    max_replays: int = 4
+    backoff_clocks: int = 16
+    row_retire_threshold: int = 0
+    max_retired_rows: int = 64
+    refresh_escalate_threshold: int = 0
+    refresh_escalate_max: int = 3
+    failed_channels: tuple = ()
+    outage_windows: tuple = ()
+
+    _ECC = ("none", "secded")
+
+    def __post_init__(self) -> None:
+        for name in ("transient_ber", "weak_row_fraction", "weak_row_ber",
+                     "due_fraction"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"faults.{name}={v} must be in [0, 1]")
+        if self.ecc not in self._ECC:
+            raise ValueError(
+                f"faults.ecc={self.ecc!r} must be one of {self._ECC}")
+        _check_range("faults.ecc_correction_clocks",
+                     self.ecc_correction_clocks, 0, 1 << 10)
+        _check_range("faults.max_replays", self.max_replays, 0, 64)
+        _check_range("faults.backoff_clocks", self.backoff_clocks,
+                     0, 1 << 20)
+        _check_range("faults.row_retire_threshold",
+                     self.row_retire_threshold, 0, 1 << 20)
+        _check_range("faults.max_retired_rows", self.max_retired_rows,
+                     0, 1 << 16)
+        _check_range("faults.refresh_escalate_threshold",
+                     self.refresh_escalate_threshold, 0, 1 << 30)
+        _check_range("faults.refresh_escalate_max",
+                     self.refresh_escalate_max, 0, 8)
+        if self.seed < 0:
+            raise ValueError("faults.seed must be >= 0")
+        for ch in self.failed_channels:
+            if not isinstance(ch, int) or ch < 0:
+                raise ValueError(
+                    "faults.failed_channels must be non-negative channel "
+                    "indices")
+        if len(set(self.failed_channels)) != len(self.failed_channels):
+            raise ValueError("faults.failed_channels has duplicates")
+        for win in self.outage_windows:
+            if (len(win) != 3 or any(int(x) != x for x in win)
+                    or win[0] < 0 or win[1] < 0 or win[2] <= win[1]):
+                raise ValueError(
+                    f"faults.outage_windows entry {win!r} must be "
+                    "(channel, start, end) with 0 <= start < end in "
+                    "DRAM clocks")
+
+    @property
+    def injects(self) -> bool:
+        """True when the service stream can see any injected event
+        (errors or transient outage stalls)."""
+        return bool(self.transient_ber > 0.0
+                    or (self.weak_row_fraction > 0.0
+                        and self.weak_row_ber > 0.0)
+                    or self.outage_windows)
+
+    @property
+    def active(self) -> bool:
+        """True when the fault layer changes *anything* about the run;
+        False degenerates bit-identically to the fault-free pipeline."""
+        return self.injects or bool(self.failed_channels)
+
+    def backoff_for(self, attempt: int) -> int:
+        """Backoff in DRAM clocks before replay number ``attempt``
+        (1-based), doubling per failed attempt."""
+        return self.backoff_clocks << max(0, attempt - 1)
+
+    def outage_windows_for(self, channel: int) -> list[tuple[int, int]]:
+        """Sorted ``(start, end)`` outage intervals for one channel."""
+        return sorted((int(s), int(e)) for ch, s, e in self.outage_windows
+                      if int(ch) == channel)
+
+
+@dataclasses.dataclass(frozen=True)
 class DMAConfig:
     """DMA engine parameters (Table I, 'Direct Memory Access')."""
 
@@ -245,6 +386,10 @@ class MemoryControllerConfig:
     channels: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
     dram_sched: DRAMSchedConfig = dataclasses.field(
         default_factory=DRAMSchedConfig)
+    #: RAS / fault-injection model; ``None`` (or an all-zero-rate
+    #: config) is the perfectly-reliable device and degenerates
+    #: bit-identically to the fault-free pipeline.
+    faults: Optional[FaultConfig] = None
     # FLIT generation + path-selection latency budget (paper: <= 10 cycles).
     ctrl_overhead_cycles: int = 10
 
@@ -261,6 +406,22 @@ class MemoryControllerConfig:
                 or self.dma.enabled):
             raise ValueError(
                 "at least one engine (scheduler/cache/dma) must be enabled")
+        if self.faults is not None:
+            nch = self.channels.num_channels
+            bad = [c for c in self.faults.failed_channels if c >= nch]
+            if bad:
+                raise ValueError(
+                    f"faults.failed_channels {bad} outside "
+                    f"[0, num_channels={nch})")
+            if len(self.faults.failed_channels) >= nch:
+                raise ValueError(
+                    "faults.failed_channels would fail every channel — "
+                    "at least one must survive")
+            bad = [w for w in self.faults.outage_windows if w[0] >= nch]
+            if bad:
+                raise ValueError(
+                    f"faults.outage_windows channels {bad} outside "
+                    f"[0, num_channels={nch})")
 
     # ---- derived resource model (paper §V-B analogue) --------------------
     def vmem_footprint_bytes(self) -> int:
@@ -289,6 +450,15 @@ class MemoryControllerConfig:
         # ~16B per entry). A 1-deep window is the plain FIFO head.
         total += (self.channels.num_channels
                   * self.dram_sched.effective_window * 16)
+        if self.faults is not None and self.faults.active:
+            # RAS state per channel: replay CAM (bounded by the reorder
+            # window, addr tag + attempt counter + ready stamp ~ 24B),
+            # the row-retirement indirection CAM (row tag + spare id,
+            # 16B per retirable row) and an error-counter CAM of the
+            # same depth.
+            total += self.channels.num_channels * (
+                self.dram_sched.effective_window * 24
+                + self.faults.max_retired_rows * 24)
         return total
 
     def describe(self) -> str:
@@ -316,6 +486,15 @@ class MemoryControllerConfig:
             f"refresh={'off' if not self.dram_sched.t_refi else f'{self.dram_sched.t_rfc}/{self.dram_sched.t_refi}'}",
             f"  vmem footprint ~ {self.vmem_footprint_bytes() / 1024:.1f} KiB",
         ]
+        if self.faults is not None:
+            f = self.faults
+            lines.insert(-1, (
+                f"  faults: ber={f.transient_ber:g} "
+                f"weak={f.weak_row_fraction:g}@{f.weak_row_ber:g} "
+                f"ecc={f.ecc} replays<={f.max_replays} "
+                f"backoff={f.backoff_clocks} "
+                f"failed_ch={list(f.failed_channels)} "
+                f"outages={len(f.outage_windows)}"))
         return "\n".join(lines)
 
 

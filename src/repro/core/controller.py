@@ -246,9 +246,12 @@ class MemoryController:
     # subsets, property-tested bit-identical to their pre-refactor
     # outputs (tests/core/test_pipeline.py).
 
-    def _run(self, stream: RequestStream, **stage_kwargs) -> PipelineResult:
+    def _run(self, stream: RequestStream, *, faults=None,
+             **stage_kwargs) -> PipelineResult:
         ctx = pipeline_mod.PipelineContext.from_config(self.config,
                                                        self.timings)
+        if faults is not None:
+            ctx.faults = faults
         stages = pipeline_mod.default_stages(ctx, **stage_kwargs)
         return pipeline_mod.run_pipeline(stream, ctx, stages)
 
@@ -257,6 +260,7 @@ class MemoryController:
         *, arbiter_policy: str = "round_robin", weights=None,
         coalesce_writes: bool = False,
         arrival_cycle=None, open_loop: bool | None = None,
+        faults=None,
     ) -> PipelineResult:
         """Full-pipeline simulation of an irregular row trace — the
         paper's headline composition (cache engine *and* batch scheduler
@@ -285,10 +289,32 @@ class MemoryController:
         identity sojourn accounting needs). With all stamps zero the
         serving datapath is bit-identical to the closed-loop pipeline
         (property-tested); ``open_loop`` forces the mode explicitly.
+
+        ``faults`` overrides ``config.faults`` for this run (RAS layer,
+        ARCHITECTURE §10): error injection, ECC/CRC handling, bounded
+        replay with backoff, outage windows and graceful degradation —
+        the result then carries a ``.fault`` stats block (and, open
+        loop, per-request ``.dropped`` flags). ``None`` inherits the
+        config; an inactive :class:`~repro.core.config.FaultConfig` is
+        bit-identical to no fault layer at all (property-tested).
+
+        Raises ``ValueError`` on an empty trace — a zero-request
+        simulation is almost always an upstream bug (an over-filtered
+        trace or a bad selection), so it fails loudly here instead of
+        returning an all-zero result that silently poisons derived
+        bandwidth/latency numbers. Callers that genuinely want the
+        degenerate run can build it from the pipeline primitives
+        (``RequestStream.from_rows`` + ``run_pipeline``).
         """
         stream = RequestStream.from_rows(row_ids, rw, row_bytes=row_bytes,
                                          pe_id=pe_id,
                                          arrival_cycle=arrival_cycle)
+        if len(stream) == 0:
+            raise ValueError(
+                "simulate() got an empty trace (0 requests) — refusing "
+                "to report an all-zero result; check the upstream trace "
+                "generation/filtering (use the pipeline primitives "
+                "directly if a degenerate empty run is intended)")
         ports = self.config.num_pes if pe_id is not None else None
         serving = open_loop if open_loop is not None else \
             stream.has_arrivals
@@ -297,13 +323,15 @@ class MemoryController:
                                                            self.timings)
             ctx.scheduler = None
             ctx.open_loop = True
+            if faults is not None:
+                ctx.faults = faults
             stages = pipeline_mod.default_stages(
                 ctx, ports=ports, arbiter_policy=arbiter_policy,
                 weights=weights, cache=False)
             return pipeline_mod.run_pipeline(stream, ctx, stages)
         return self._run(
             stream,
-            ports=ports,
+            ports=ports, faults=faults,
             arbiter_policy=arbiter_policy, weights=weights,
             cache=True, coalesce_writes=coalesce_writes)
 

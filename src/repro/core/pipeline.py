@@ -55,7 +55,8 @@ from repro.core import cache_engine
 from repro.core import channels as channels_mod
 from repro.core import scheduler as scheduler_mod
 from repro.core.config import (CacheConfig, ChannelConfig, DRAMSchedConfig,
-                               MemoryControllerConfig, SchedulerConfig)
+                               FaultConfig, MemoryControllerConfig,
+                               SchedulerConfig)
 from repro.core.timing import (DRAMTimings, SimResult,
                                simulate_dram_access, simulate_dram_sched,
                                t_overlapped_schedule)
@@ -203,6 +204,9 @@ class PipelineContext:
     #: DRAM command scheduler (FR-FCFS + refresh); ``None`` keeps the
     #: strict-FIFO service model of the pre-scheduler pipeline.
     dram_sched: DRAMSchedConfig | None = None
+    #: RAS / fault-injection config (``None`` or an inactive config is
+    #: the perfectly-reliable device — bit-identical degeneracy).
+    faults: "FaultConfig | None" = None
     #: Open-loop serving mode: ``None`` auto-enables when the stream
     #: carries non-zero arrival stamps; ``True`` forces the serving
     #: datapath even for all-zero arrivals (the degeneracy harness);
@@ -223,6 +227,8 @@ class PipelineContext:
     serving_pe: np.ndarray | None = None            # DRAMService, by seq
     serving_idle: float = 0.0                       # DRAMService
     serving_port_stats: "channels_mod.ArbiterStats | None" = None
+    serving_dropped: np.ndarray | None = None       # DRAMService, by seq
+    fault_stats: "object | None" = None             # DRAMService
 
     @classmethod
     def from_config(cls, config: MemoryControllerConfig,
@@ -230,14 +236,20 @@ class PipelineContext:
         return cls(channels=config.channels, scheduler=config.scheduler,
                    cache=config.cache, timings=timings,
                    ctrl_overhead_cycles=float(config.ctrl_overhead_cycles),
-                   dram_sched=config.dram_sched)
+                   dram_sched=config.dram_sched, faults=config.faults)
 
     @property
     def num_channels(self) -> int:
         return self.channels.num_channels
 
+    @property
+    def fault_active(self) -> bool:
+        """True when the RAS layer changes anything at all this run."""
+        return self.faults is not None and self.faults.active
+
     def address_map(self) -> channels_mod.AddressMap:
-        return channels_mod.AddressMap(self.channels, self.timings)
+        return channels_mod.AddressMap(self.channels, self.timings,
+                                       self.faults)
 
 
 @dataclasses.dataclass
@@ -344,6 +356,12 @@ class PipelineResult:
     port_stats: channels_mod.ArbiterStats | None = None
     #: per-request sojourn statistics — populated only by open-loop runs
     serving: ServingStats | None = None
+    #: RAS observability — populated only when a fault config is active
+    #: (``repro.core.faults.FaultStats`` aggregated over channels)
+    fault: "object | None" = None
+    #: per-request dropped flags indexed by ``seq`` — open-loop runs
+    #: under an active fault config only (``None`` otherwise)
+    dropped: np.ndarray | None = None
 
     def stage(self, name: str) -> StageStats | None:
         for s in self.stages:
@@ -495,7 +513,7 @@ class CacheFilterStage:
     def run(self, stream: RequestStream, ctx: PipelineContext):
         if ctx.cache is None:
             raise ValueError("CacheFilterStage requires a cache config")
-        key = (ctx.cache, ctx.channels, ctx.timings)
+        key = (ctx.cache, ctx.channels, ctx.timings, ctx.faults)
         if self.memo is not None and key in self.memo:
             return self.memo[key]
         cache = ctx.cache
@@ -635,6 +653,8 @@ class DRAMServiceStage:
     def run(self, stream: RequestStream, ctx: PipelineContext):
         if _open_loop_active(stream, ctx):
             return self._run_serving(stream, ctx)
+        if ctx.fault_active:
+            return self._run_closed_faults(stream, ctx)
         sched = ctx.dram_sched
         # The default config degenerates to strict FIFO — skip the
         # scheduler wrapper entirely (it would recompute turnarounds
@@ -670,6 +690,44 @@ class DRAMServiceStage:
         return stream, StageStats(
             self.name, makespan, len(stream), len(stream), info)
 
+    def _run_closed_faults(self, stream: RequestStream,
+                           ctx: PipelineContext):
+        """Closed-loop service under an *active* fault config: each
+        channel runs the fault-injected engine with every request
+        pending from cycle 0 (the serving model's closed-loop
+        degeneracy), so ECC correction stalls, replay bus traffic,
+        outage windows and degradation land in the charged makespan.
+        The fault-free branch above is untouched — an inactive config
+        never reaches here (bit-identical degeneracy)."""
+        from repro.core.timing import simulate_faults
+
+        sched = ctx.dram_sched if ctx.dram_sched is not None \
+            else DRAMSchedConfig()
+        per_channel: list[SimResult] = []
+        fault_agg = None
+        n_ref = 0
+        for k, sel in _per_channel(stream, ctx.num_channels):
+            res = simulate_faults(
+                stream.local_addr[sel], ctx.timings, sched,
+                rw=stream.rw[sel], faults=ctx.faults, channel=k)
+            n_ref += res.n_refreshes
+            fault_agg = res.fault if fault_agg is None \
+                else fault_agg.combine(res.fault)
+            per_channel.append(res)
+        ctx.fault_stats = fault_agg
+        makespan = max((r.total_fpga_cycles for r in per_channel),
+                       default=0.0)
+        ctx.dram_makespan = makespan
+        busy = float(sum(r.total_fpga_cycles for r in per_channel))
+        info = {"per_channel": per_channel, "busy_fpga_cycles": busy,
+                "occupancy_per_channel": [r.total_fpga_cycles
+                                          for r in per_channel],
+                "sched_policy": sched.policy,
+                "reorder_window": sched.effective_window,
+                "n_refreshes": n_ref, "fault": fault_agg}
+        return stream, StageStats(
+            self.name, makespan, len(stream), len(stream), info)
+
     def _run_serving(self, stream: RequestStream, ctx: PipelineContext):
         """Open-loop service: each channel runs the coupled
         admission+scheduling model (:func:`repro.core.timing.
@@ -677,8 +735,14 @@ class DRAMServiceStage:
         configured arbiter granting into the reorder window at issue
         pace, idle gaps advanced (with refresh absorption). Per-request
         completion stamps are scattered back by ``seq`` so the runner
-        can report sojourn percentiles against the original stream."""
-        from repro.core.timing import simulate_arrivals
+        can report sojourn percentiles against the original stream.
+
+        With an active fault config every channel runs the RAS engine
+        (:func:`repro.core.timing.simulate_faults`) instead — same
+        admission loop plus error injection / ECC / bounded replay /
+        degradation — and the per-channel ``FaultStats`` are combined
+        onto the context blackboard, dropped flags scattered by seq."""
+        from repro.core.timing import simulate_arrivals, simulate_faults
 
         n = len(stream)
         if n and int(stream.seq.min()) < 0:
@@ -708,14 +772,26 @@ class DRAMServiceStage:
         if nports is not None and nports > 1:
             grants = np.zeros(nports, np.int64)
             stalls = np.zeros(nports, np.int64)
-        for _k, sel in _per_channel(stream, ctx.num_channels):
-            res = simulate_arrivals(
-                stream.local_addr[sel], ctx.timings, sched,
+        fault_on = ctx.fault_active
+        fault_agg = None
+        dropped = np.zeros(size, bool) if fault_on else None
+        for k, sel in _per_channel(stream, ctx.num_channels):
+            sub = dict(
                 rw=stream.rw[sel], arrival_fpga=arr[sel],
                 pe_id=(stream.pe_id[sel] if nports is not None
                        and nports > 1 else None),
                 num_ports=nports, arb_policy=ctx.arb_policy,
                 weights=ctx.arb_weights)
+            if fault_on:
+                res = simulate_faults(
+                    stream.local_addr[sel], ctx.timings, sched,
+                    faults=ctx.faults, channel=k, **sub)
+                fault_agg = res.fault if fault_agg is None \
+                    else fault_agg.combine(res.fault)
+                dropped[stream.seq[sel]] = res.dropped
+            else:
+                res = simulate_arrivals(
+                    stream.local_addr[sel], ctx.timings, sched, **sub)
             n_ref += res.n_refreshes
             idle += res.idle_dram_cycles * ctx.timings.clock_ratio
             seqs = stream.seq[sel]
@@ -738,6 +814,8 @@ class DRAMServiceStage:
         ctx.serving_arrival = arrival
         ctx.serving_pe = pe_by_seq
         ctx.serving_idle = idle
+        ctx.serving_dropped = dropped
+        ctx.fault_stats = fault_agg
         if grants is not None:
             ctx.serving_port_stats = channels_mod.ArbiterStats(
                 grants=grants, stall_slots=stalls,
@@ -750,6 +828,8 @@ class DRAMServiceStage:
                 "sched_policy": sched.policy,
                 "reorder_window": sched.effective_window,
                 "n_refreshes": n_ref}
+        if fault_on:
+            info["fault"] = fault_agg
         return stream, StageStats(
             self.name, makespan, len(stream), len(stream), info)
 
@@ -855,4 +935,6 @@ def run_pipeline(stream: RequestStream, ctx: PipelineContext,
         n_requests=n_in,
         cache_hit_rate=_info("cache_filter", "hit_rate"),
         port_stats=port_stats,
-        serving=serving)
+        serving=serving,
+        fault=ctx.fault_stats,
+        dropped=ctx.serving_dropped)

@@ -22,7 +22,8 @@ import math
 
 import numpy as np
 
-from repro.core.config import (DRAMSchedConfig, MemoryControllerConfig,
+from repro.core.config import (DRAMSchedConfig, FaultConfig,
+                               MemoryControllerConfig,
                                scheduler_sort_stages)
 
 
@@ -926,6 +927,407 @@ def simulate_arrivals(
         addrs, timings, sched, rw, arrival_fpga=arrival_fpga,
         pe_id=pe_id, num_ports=num_ports, arb_policy=arb_policy,
         weights=weights)
+
+
+# ---------------------------------------------------------------------------
+# Fault-injected (RAS) serving simulator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FaultSimResult(ServingSimResult):
+    """:class:`ServingSimResult` extended with RAS observability.
+
+    ``fault`` is the :class:`repro.core.faults.FaultStats` block for the
+    run. ``attempts[i]`` counts the issues request ``i`` consumed
+    (1 = clean or corrected first try; at most ``max_replays + 1``);
+    ``dropped[i]`` flags requests whose last allowed attempt still
+    failed — their completion stamp is the give-up time and they are
+    counted in ``fault.n_dropped`` / ``fault.dropped_by_port``, never
+    silently lost. With faults, ``service_dram_cycles[i]`` accumulates
+    the bus clocks of *all* of request ``i``'s issues and
+    ``service_order`` carries one entry per issue (replays repeat the
+    index); ``grant_order`` remains the first-admission permutation.
+    """
+
+    fault: "object" = None
+    attempts: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, np.int64))
+    dropped: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, bool))
+
+    def __post_init__(self):
+        if self.fault is None:
+            from repro.core.faults import FaultStats
+            self.fault = FaultStats()
+
+
+def simulate_faults_seq(
+    addrs: np.ndarray,
+    timings: DRAMTimings = DDR4_2400,
+    sched: DRAMSchedConfig = DRAMSchedConfig(),
+    rw: np.ndarray | None = None,
+    *,
+    faults: FaultConfig | None = None,
+    channel: int = 0,
+    arrival_fpga: np.ndarray | None = None,
+    pe_id: np.ndarray | None = None,
+    num_ports: int | None = None,
+    arb_policy: str = "round_robin",
+    weights=None,
+) -> FaultSimResult:
+    """Request-at-a-time oracle for the *fault-injected* open-loop
+    channel — THE specification for error injection, ECC handling,
+    bounded replay with backoff, outage stalls and graceful
+    degradation that the fast path
+    (:func:`repro.core.trace_engine.simulate_faults_fast`) is
+    property-tested bit-identical against.
+
+    The loop is :func:`simulate_arrivals_seq` (admission / idle-gap
+    advance / refresh / pick / service — unchanged) with a RAS layer
+    around the service step:
+
+    * **injection**: each *issue* of request ``i`` (attempt ``a``,
+      1-based) draws ``u = error_uniform(seed, channel, i, a)`` and
+      errors when ``u < transient_ber (+ weak_row_ber on a weak
+      row)``. Weak rows are a seeded hash of the row id; ``channel``
+      keys this channel's streams so multi-channel runs draw
+      independently.
+    * **outage windows**: before issuing, a channel inside a declared
+      ``(start, end)`` outage jumps its clock to the window end
+      (refreshes absorbed like an idle gap); pending work stalls —
+      counted in ``fault.outage_dram_cycles`` — but nothing drops.
+    * **classification**: an errored read under SECDED is *corrected*
+      (``ecc_correction_clocks`` added to the issue's bus time) unless
+      ``u < p * due_fraction`` makes it detected-uncorrectable; an
+      errored write fails the link CRC when ``write_crc``; with
+      ``ecc="none"`` / ``write_crc=False`` errors are silent (counted,
+      no timing effect). The failed issue still occupied the bus
+      (class cost + burst + turnaround it triggered) — that time is
+      ``fault.replay_dram_cycles``.
+    * **bounded replay**: a failed issue re-enters a replay queue
+      ready at ``now + backoff_clocks << (attempt-1)``; ready replays
+      are re-admitted into the reorder window *before* new arbiter
+      grants (oldest-ready first). A request whose attempt
+      ``max_replays + 1`` still fails is dropped at that stamp.
+    * **degradation**: every injected error charges the effective row;
+      at ``row_retire_threshold`` the natural row is retired — later
+      accesses serve from spare row ``SPARE_ROW_BASE + row`` (same
+      bank, never weak, capacity capped by ``max_retired_rows``).
+      Every ``refresh_escalate_threshold`` injected errors shrink the
+      effective refresh interval to ``t_refi >> level`` (floor
+      ``t_rfc + 1``, at most ``refresh_escalate_max`` levels).
+
+    With ``faults=None`` or an inactive config no draw, queue, or
+    clock expression differs from :func:`simulate_arrivals_seq` — the
+    zero-rate degeneracy is bit-identical (property-tested).
+    """
+    import heapq
+
+    from repro.core import faults as F
+
+    fc = faults if faults is not None else FaultConfig()
+    addrs, n, rw_arr, arr, ports, nports = _serving_trace(
+        addrs, timings, rw, arrival_fpga, pe_id, num_ports)
+    if n == 0:
+        return FaultSimResult(total_fpga_cycles=0.0, row_hits=0,
+                              row_conflicts=0, first_accesses=0)
+    rows = timings.row_of(addrs)
+    banks = timings.bank_of(addrs)
+    w = sched.effective_window
+    use_cap = sched.policy == "frfcfs_cap"
+    t_refi, t_rfc = sched.t_refi, sched.t_rfc
+    credits = _serving_weights(nports, arb_policy, weights)
+    priority = arb_policy == "priority"
+    weak_flags = F.weak_rows(fc, channel, rows)
+    wins = fc.outage_windows_for(channel)
+    secded = fc.ecc == "secded"
+
+    queues = [list(np.flatnonzero(ports == p)) for p in range(nports)]
+    heads = [0] * nports
+    open_row: dict[int, int] = {}
+    pending: list[int] = []
+    bypass: list[int] = []
+    ptr, credit = 0, credits[0]
+    anchor: float | int = 0
+    off = 0
+    next_ref = t_refi
+    t_refi_eff = t_refi             # shrinks under refresh escalation
+    esc_level = 0
+    n_hit = n_conflict = n_first = n_ref = turn = 0
+    last_dir = -1
+    idle = 0.0
+    served = 0
+    completion = np.zeros(n, np.float64)
+    service = np.zeros(n, np.int64)
+    attempts = np.zeros(n, np.int64)
+    dropped = np.zeros(n, bool)
+    grant_order: list[int] = []
+    granted_port: list[int] = []
+    order: list[int] = []
+    replay_q: list[tuple[float, int, int]] = []   # (ready, seq, idx)
+    rseq = 0
+    retired: dict[int, int] = {}    # natural row -> spare row
+    err_count: dict[int, int] = {}  # effective row -> charged errors
+    st = F.FaultStats()
+    retired_seq: list[tuple[int, int]] = []
+    dropped_by_port: dict[int, int] = {}
+
+    def eligible(p: int) -> bool:
+        h = heads[p]
+        return h < len(queues[p]) and arr[queues[p][h]] <= anchor + off
+
+    while served < n:
+        while len(pending) < w:              # -- admission
+            if replay_q and replay_q[0][0] <= anchor + off:
+                _, _, ridx = heapq.heappop(replay_q)
+                pending.append(ridx)         # replays re-enter first
+                bypass.append(0)
+                continue
+            g = -1
+            if priority:
+                for p in range(nports):
+                    if eligible(p):
+                        g = p
+                        break
+            else:
+                for _ in range(nports + 1):
+                    if credit > 0 and eligible(ptr):
+                        g = ptr
+                        credit -= 1
+                        break
+                    ptr = (ptr + 1) % nports
+                    credit = credits[ptr]
+            if g < 0:
+                break
+            idx = queues[g][heads[g]]
+            heads[g] += 1
+            pending.append(idx)
+            bypass.append(0)
+            grant_order.append(idx)
+            granted_port.append(g)
+        if not pending:                      # -- idle-gap advance
+            targets = [arr[queues[p][heads[p]]] for p in range(nports)
+                       if heads[p] < len(queues[p])]
+            if replay_q:
+                targets.append(replay_q[0][0])
+            target = min(targets)
+            if t_refi:
+                while next_ref <= target:
+                    n_ref += 1
+                    open_row.clear()
+                    end = next_ref + t_rfc
+                    next_ref += t_refi_eff
+                    if end > target:
+                        target = end         # arrived mid-refresh
+            idle += target - (anchor + off)
+            anchor, off = target, 0
+            continue
+        now = anchor + off
+        jumped = False
+        for s, e in wins:                    # -- outage window stall
+            if s <= now < e:
+                target = float(e)
+                if t_refi:
+                    while next_ref <= target:
+                        n_ref += 1
+                        open_row.clear()
+                        end = next_ref + t_rfc
+                        next_ref += t_refi_eff
+                        if end > target:
+                            target = end
+                st.outage_dram_cycles += target - now
+                anchor, off = target, 0
+                jumped = True
+                break
+        if jumped:
+            continue
+        if t_refi:
+            while anchor + off >= next_ref:  # refresh precedes the issue
+                off += t_rfc
+                n_ref += 1
+                open_row.clear()
+                next_ref += t_refi_eff
+        pick = 0
+        if w > 1:
+            forced = None
+            if use_cap:
+                for i in range(len(pending)):
+                    if bypass[i] >= sched.starvation_cap:
+                        forced = i
+                        break
+            if forced is not None:
+                pick = forced
+            else:
+                for i, j in enumerate(pending):
+                    b = int(banks[j])
+                    eff = retired.get(int(rows[j]), int(rows[j]))
+                    if b in open_row and open_row[b] == eff:
+                        pick = i
+                        break
+        idx = pending.pop(pick)
+        bypass.pop(pick)
+        b, r_nat = int(banks[idx]), int(rows[idx])
+        r = retired.get(r_nat, r_nat)
+        if r != r_nat:
+            st.spare_issues += 1
+        if b not in open_row:
+            n_first += 1
+            cost = timings.t_rcd + timings.t_cl
+        elif open_row[b] == r:
+            n_hit += 1
+            cost = timings.t_cl
+        else:
+            n_conflict += 1
+            cost = timings.t_rp + timings.t_rcd + timings.t_cl
+        open_row[b] = r
+        cost += timings.t_burst
+        if rw_arr is not None:
+            d = int(rw_arr[idx])
+            if last_dir == 1 and d == 0:
+                turn += timings.t_wtr
+                cost += timings.t_wtr
+            elif last_dir == 0 and d == 1:
+                turn += timings.t_rtw
+                cost += timings.t_rtw
+            last_dir = d
+        attempts[idx] += 1
+        att = int(attempts[idx])
+        if att > 1:
+            st.n_replays += 1
+        weak = bool(weak_flags[idx]) and r == r_nat
+        p_err = F.error_prob(fc, weak)
+        errored = False
+        u = 0.0
+        if p_err > 0.0:
+            u = F.error_uniform(fc, channel, idx, att)
+            errored = u < p_err
+        failed = False
+        if errored:
+            st.n_injected += 1
+            if fc.row_retire_threshold and r < F.SPARE_ROW_BASE:
+                c = err_count.get(r, 0) + 1
+                err_count[r] = c
+                if (c >= fc.row_retire_threshold
+                        and r_nat not in retired
+                        and len(retired) < fc.max_retired_rows):
+                    retired[r_nat] = F.SPARE_ROW_BASE + r_nat
+                    retired_seq.append((channel, r_nat))
+            if fc.refresh_escalate_threshold and t_refi:
+                while (esc_level < fc.refresh_escalate_max
+                       and st.n_injected >= fc.refresh_escalate_threshold
+                       * (esc_level + 1)):
+                    esc_level += 1
+                    st.refresh_escalations += 1
+                    shrunk = t_refi >> esc_level
+                    t_refi_eff = shrunk if shrunk > t_rfc else t_rfc + 1
+            is_read = rw_arr is None or int(rw_arr[idx]) == 0
+            if is_read:
+                if secded:
+                    if u < p_err * fc.due_fraction:
+                        failed = True            # detected-uncorrectable
+                    else:
+                        st.n_corrected += 1
+                        st.correction_dram_cycles += fc.ecc_correction_clocks
+                        cost += fc.ecc_correction_clocks
+                else:
+                    st.n_silent += 1
+            else:
+                if fc.write_crc:
+                    failed = True                # link CRC retry
+                else:
+                    st.n_silent += 1
+        off += cost
+        for i in range(pick):
+            bypass[i] += 1
+        service[idx] += cost
+        order.append(idx)
+        if failed:
+            st.n_uncorrectable += 1
+            st.replay_dram_cycles += cost
+            if att > fc.max_replays:             # out of attempts: drop
+                dropped[idx] = True
+                st.n_dropped += 1
+                port = int(ports[idx])
+                dropped_by_port[port] = dropped_by_port.get(port, 0) + 1
+                completion[idx] = anchor + off
+                served += 1
+            else:
+                rseq += 1
+                heapq.heappush(replay_q, (anchor + off
+                                          + fc.backoff_for(att), rseq, idx))
+        else:
+            completion[idx] = anchor + off
+            served += 1
+
+    st.rows_retired = tuple(retired_seq)
+    st.dropped_by_port = dropped_by_port
+    return FaultSimResult(
+        total_fpga_cycles=(anchor + off) * timings.clock_ratio,
+        row_hits=n_hit, row_conflicts=n_conflict, first_accesses=n_first,
+        n_refreshes=n_ref, refresh_dram_cycles=n_ref * t_rfc,
+        turnaround_dram_cycles=turn,
+        service_order=np.asarray(order, dtype=np.int64),
+        completion_fpga_cycles=completion * timings.clock_ratio,
+        service_dram_cycles=service,
+        grant_order=np.asarray(grant_order, dtype=np.int64),
+        granted_port=np.asarray(granted_port, dtype=np.int64),
+        idle_dram_cycles=idle,
+        fault=st, attempts=attempts, dropped=dropped)
+
+
+def simulate_faults(
+    addrs: np.ndarray,
+    timings: DRAMTimings = DDR4_2400,
+    sched: DRAMSchedConfig = DRAMSchedConfig(),
+    rw: np.ndarray | None = None,
+    *,
+    faults: FaultConfig | None = None,
+    channel: int = 0,
+    arrival_fpga: np.ndarray | None = None,
+    pe_id: np.ndarray | None = None,
+    num_ports: int | None = None,
+    arb_policy: str = "round_robin",
+    weights=None,
+    engine: str = "auto",
+) -> FaultSimResult:
+    """Fault-injected channel service — the fast engine, bit-identical
+    to :func:`simulate_faults_seq`. An inactive fault config (``None``
+    or nothing to inject on any channel) delegates to the fault-free
+    fast path and wraps its result — the zero-rate degeneracy costs
+    nothing."""
+    if engine not in ("auto", "fast", "sequential"):
+        raise ValueError(f"engine={engine!r} must be auto|fast|sequential")
+    if engine == "sequential":
+        return simulate_faults_seq(
+            addrs, timings, sched, rw, faults=faults, channel=channel,
+            arrival_fpga=arrival_fpga, pe_id=pe_id, num_ports=num_ports,
+            arb_policy=arb_policy, weights=weights)
+    if faults is None or not faults.injects:
+        base = simulate_arrivals(
+            addrs, timings, sched, rw, arrival_fpga=arrival_fpga,
+            pe_id=pe_id, num_ports=num_ports, arb_policy=arb_policy,
+            weights=weights)
+        n = base.completion_fpga_cycles.size
+        return FaultSimResult(
+            total_fpga_cycles=base.total_fpga_cycles,
+            row_hits=base.row_hits, row_conflicts=base.row_conflicts,
+            first_accesses=base.first_accesses,
+            n_refreshes=base.n_refreshes,
+            refresh_dram_cycles=base.refresh_dram_cycles,
+            turnaround_dram_cycles=base.turnaround_dram_cycles,
+            service_order=base.service_order,
+            completion_fpga_cycles=base.completion_fpga_cycles,
+            service_dram_cycles=base.service_dram_cycles,
+            grant_order=base.grant_order,
+            granted_port=base.granted_port,
+            idle_dram_cycles=base.idle_dram_cycles,
+            attempts=np.ones(n, np.int64),
+            dropped=np.zeros(n, bool))
+    from repro.core import trace_engine
+    return trace_engine.simulate_faults_fast(
+        addrs, timings, sched, rw, faults=faults, channel=channel,
+        arrival_fpga=arrival_fpga, pe_id=pe_id, num_ports=num_ports,
+        arb_policy=arb_policy, weights=weights)
 
 
 def modeled_bandwidth_gbps(

@@ -1395,3 +1395,319 @@ def _arrivals_fast_multi(addrs, n, timings, sched, rw_arr, arr, ports,
         grant_order=grant_order,
         granted_port=granted_port,
         idle_dram_cycles=idle)
+
+
+def simulate_faults_fast(addrs, timings, sched, rw=None, *,
+                         faults, channel=0, arrival_fpga=None,
+                         pe_id=None, num_ports=None,
+                         arb_policy="round_robin", weights=None):
+    """Fast path of :func:`repro.core.timing.simulate_faults` —
+    bit-identical to ``simulate_faults_seq`` (property-tested over
+    fault rate x ECC mode x replay bound x backoff x outage x ports x
+    DRAM policy x refresh).
+
+    Same optimized event-at-a-time loop as
+    :func:`_arrivals_fast_multi` (python-list state, anchored clock),
+    with the RAS layer woven around the service step. The fault draws
+    are where the speed comes from: every request's *first-attempt*
+    uniform and weak-row flag are computed in one vectorized
+    splitmix64 pass up front (the counter-based hash makes the draw a
+    pure function of ``(seed, channel, index, attempt)``, so
+    evaluating it early cannot perturb anything); only replay attempts
+    — rare by construction — fall back to the scalar hash, which is
+    the same wrapping arithmetic.
+    """
+    import heapq
+
+    from repro.core import faults as F
+    from repro.core.timing import (FaultSimResult, _serving_trace,
+                                   _serving_weights)
+
+    fc = faults
+    addrs, n, rw_arr, arr, ports, nports = _serving_trace(
+        addrs, timings, rw, arrival_fpga, pe_id, num_ports)
+    credits = _serving_weights(nports, arb_policy, weights)
+    if n == 0:
+        return FaultSimResult(total_fpga_cycles=0.0, row_hits=0,
+                              row_conflicts=0, first_accesses=0)
+    rows = timings.row_of(addrs)
+    banks = timings.bank_of(addrs)
+    w = sched.effective_window
+    use_cap = sched.policy == "frfcfs_cap"
+    cap = sched.starvation_cap
+    t_refi, t_rfc = sched.t_refi, sched.t_rfc
+    t_wtr, t_rtw = timings.t_wtr, timings.t_rtw
+    t_cl, t_rcd, t_rp = timings.t_cl, timings.t_rcd, timings.t_rp
+    t_burst = timings.t_burst
+    priority = arb_policy == "priority"
+    secded = fc.ecc == "secded"
+    due_frac = fc.due_fraction
+    ecc_clocks = fc.ecc_correction_clocks
+    write_crc = fc.write_crc
+    max_replays = fc.max_replays
+    retire_thresh = fc.row_retire_threshold
+    esc_thresh = fc.refresh_escalate_threshold
+    wins = fc.outage_windows_for(channel)
+
+    weak = F.weak_rows(fc, channel, rows)
+    p_req = np.minimum(
+        fc.transient_ber + np.where(weak, fc.weak_row_ber, 0.0), 1.0)
+    # error_prob(fc, False) with the same float expression as the spec:
+    p_base = fc.transient_ber if fc.transient_ber < 1.0 else 1.0
+    if p_req.max() > 0.0:
+        u1 = F.error_uniforms(fc, channel, np.arange(n, dtype=np.int64), 1)
+    else:
+        u1 = np.zeros(n)
+    u1_l = u1.tolist()
+    p_l = p_req.tolist()
+    weak_l = weak.tolist()
+    banks_l = banks.tolist()
+    rows_l = rows.tolist()
+    rw_l = None if rw_arr is None else rw_arr.tolist()
+    arr_l = arr.tolist()
+    ports_l = ports.tolist()
+    queues = [np.flatnonzero(ports == p).tolist() for p in range(nports)]
+    qlen = [len(q) for q in queues]
+    heads = [0] * nports
+    open_l = [0] * timings.num_banks
+    opened_l = [False] * timings.num_banks
+    pending: list[int] = []
+    bypass: list[int] = []
+    ptr, credit = 0, credits[0]
+    anchor = 0
+    off = 0
+    next_ref = t_refi
+    t_refi_eff = t_refi
+    esc_level = 0
+    n_hit = n_conflict = n_first = n_ref = turn = 0
+    last_dir = -1
+    idle = 0.0
+    served = 0
+    completion = np.zeros(n, np.float64)
+    service = np.zeros(n, np.int64)
+    attempts_np = np.zeros(n, np.int64)
+    attempts = attempts_np.tolist()
+    dropped = np.zeros(n, bool)
+    grant_order = np.empty(n, np.int64)
+    granted_port = np.empty(n, np.int64)
+    granted = 0
+    order: list[int] = []
+    replay_q: list = []
+    rseq = 0
+    retired: dict[int, int] = {}
+    err_count: dict[int, int] = {}
+    st = F.FaultStats()
+    retired_seq: list = []
+    dropped_by_port: dict[int, int] = {}
+
+    while served < n:
+        cur = anchor + off
+        while len(pending) < w:              # -- admission
+            if replay_q and replay_q[0][0] <= cur:
+                pending.append(heapq.heappop(replay_q)[2])
+                bypass.append(0)
+                continue
+            g = -1
+            if priority:
+                for p in range(nports):
+                    h = heads[p]
+                    if h < qlen[p] and arr_l[queues[p][h]] <= cur:
+                        g = p
+                        break
+            else:
+                for _ in range(nports + 1):
+                    if credit > 0:
+                        h = heads[ptr]
+                        if h < qlen[ptr] and arr_l[queues[ptr][h]] <= cur:
+                            g = ptr
+                            credit -= 1
+                            break
+                    ptr += 1
+                    if ptr == nports:
+                        ptr = 0
+                    credit = credits[ptr]
+            if g < 0:
+                break
+            idx = queues[g][heads[g]]
+            heads[g] += 1
+            pending.append(idx)
+            bypass.append(0)
+            grant_order[granted] = idx
+            granted_port[granted] = g
+            granted += 1
+        if not pending:                      # -- idle-gap advance
+            target = min(arr_l[queues[p][heads[p]]] for p in range(nports)
+                         if heads[p] < qlen[p]) if any(
+                heads[p] < qlen[p] for p in range(nports)) else replay_q[0][0]
+            if replay_q and replay_q[0][0] < target:
+                target = replay_q[0][0]
+            if t_refi:
+                while next_ref <= target:
+                    n_ref += 1
+                    opened_l = [False] * timings.num_banks
+                    end = next_ref + t_rfc
+                    next_ref += t_refi_eff
+                    if end > target:
+                        target = end
+            idle += target - (anchor + off)
+            anchor, off = target, 0
+            continue
+        now = anchor + off
+        jumped = False
+        for s, e in wins:                    # -- outage window stall
+            if s <= now < e:
+                target = float(e)
+                if t_refi:
+                    while next_ref <= target:
+                        n_ref += 1
+                        opened_l = [False] * timings.num_banks
+                        end = next_ref + t_rfc
+                        next_ref += t_refi_eff
+                        if end > target:
+                            target = end
+                st.outage_dram_cycles += target - now
+                anchor, off = target, 0
+                jumped = True
+                break
+        if jumped:
+            continue
+        if t_refi:
+            while anchor + off >= next_ref:
+                off += t_rfc
+                n_ref += 1
+                opened_l = [False] * timings.num_banks
+                next_ref += t_refi_eff
+        pick = 0
+        if w > 1:
+            forced = -1
+            if use_cap:
+                for i, bp in enumerate(bypass):
+                    if bp >= cap:
+                        forced = i
+                        break
+            if forced >= 0:
+                pick = forced
+            elif retired:
+                for i, j in enumerate(pending):
+                    b = banks_l[j]
+                    rj = rows_l[j]
+                    if opened_l[b] and open_l[b] == retired.get(rj, rj):
+                        pick = i
+                        break
+            else:
+                for i, j in enumerate(pending):
+                    b = banks_l[j]
+                    if opened_l[b] and open_l[b] == rows_l[j]:
+                        pick = i
+                        break
+        idx = pending.pop(pick)
+        bypass.pop(pick)
+        b, r_nat = banks_l[idx], rows_l[idx]
+        r = retired.get(r_nat, r_nat) if retired else r_nat
+        if r != r_nat:
+            st.spare_issues += 1
+        if not opened_l[b]:
+            n_first += 1
+            cost = t_rcd + t_cl
+        elif open_l[b] == r:
+            n_hit += 1
+            cost = t_cl
+        else:
+            n_conflict += 1
+            cost = t_rp + t_rcd + t_cl
+        opened_l[b] = True
+        open_l[b] = r
+        cost += t_burst
+        if rw_l is not None:
+            d = rw_l[idx]
+            if last_dir == 1 and d == 0:
+                turn += t_wtr
+                cost += t_wtr
+            elif last_dir == 0 and d == 1:
+                turn += t_rtw
+                cost += t_rtw
+            last_dir = d
+        att = attempts[idx] + 1
+        attempts[idx] = att
+        if att > 1:
+            st.n_replays += 1
+        p_err = (p_l[idx] if r == r_nat else p_base) if weak_l[idx] \
+            else p_l[idx]
+        errored = False
+        u = 0.0
+        if p_err > 0.0:
+            u = u1_l[idx] if att == 1 else F.error_uniform(
+                fc, channel, idx, att)
+            errored = u < p_err
+        failed = False
+        if errored:
+            st.n_injected += 1
+            if retire_thresh and r < F.SPARE_ROW_BASE:
+                c = err_count.get(r, 0) + 1
+                err_count[r] = c
+                if (c >= retire_thresh and r_nat not in retired
+                        and len(retired) < fc.max_retired_rows):
+                    retired[r_nat] = F.SPARE_ROW_BASE + r_nat
+                    retired_seq.append((channel, r_nat))
+            if esc_thresh and t_refi:
+                while (esc_level < fc.refresh_escalate_max
+                       and st.n_injected >= esc_thresh * (esc_level + 1)):
+                    esc_level += 1
+                    st.refresh_escalations += 1
+                    shrunk = t_refi >> esc_level
+                    t_refi_eff = shrunk if shrunk > t_rfc else t_rfc + 1
+            is_read = rw_l is None or rw_l[idx] == 0
+            if is_read:
+                if secded:
+                    if u < p_err * due_frac:
+                        failed = True
+                    else:
+                        st.n_corrected += 1
+                        st.correction_dram_cycles += ecc_clocks
+                        cost += ecc_clocks
+                else:
+                    st.n_silent += 1
+            else:
+                if write_crc:
+                    failed = True
+                else:
+                    st.n_silent += 1
+        off += cost
+        for i in range(pick):
+            bypass[i] += 1
+        service[idx] += cost
+        order.append(idx)
+        if failed:
+            st.n_uncorrectable += 1
+            st.replay_dram_cycles += cost
+            if att > max_replays:
+                dropped[idx] = True
+                st.n_dropped += 1
+                port = ports_l[idx]
+                dropped_by_port[port] = dropped_by_port.get(port, 0) + 1
+                completion[idx] = anchor + off
+                served += 1
+            else:
+                rseq += 1
+                heapq.heappush(
+                    replay_q,
+                    (anchor + off + fc.backoff_for(att), rseq, idx))
+        else:
+            completion[idx] = anchor + off
+            served += 1
+
+    st.rows_retired = tuple(retired_seq)
+    st.dropped_by_port = dropped_by_port
+    attempts_np = np.asarray(attempts, np.int64)
+    return FaultSimResult(
+        total_fpga_cycles=(anchor + off) * timings.clock_ratio,
+        row_hits=n_hit, row_conflicts=n_conflict, first_accesses=n_first,
+        n_refreshes=n_ref, refresh_dram_cycles=n_ref * t_rfc,
+        turnaround_dram_cycles=turn,
+        service_order=np.asarray(order, dtype=np.int64),
+        completion_fpga_cycles=completion * timings.clock_ratio,
+        service_dram_cycles=service,
+        grant_order=grant_order[:granted],
+        granted_port=granted_port[:granted],
+        idle_dram_cycles=idle,
+        fault=st, attempts=attempts_np, dropped=dropped)

@@ -17,9 +17,10 @@ import os
 
 import numpy as np
 
-from repro.core.config import (CacheConfig, DRAMSchedConfig,
-                               MemoryControllerConfig, PAPER_COMBINED_CONFIG,
-                               PAPER_EVAL_CONFIG, SchedulerConfig)
+from repro.core.config import (CacheConfig, ChannelConfig, DRAMSchedConfig,
+                               FaultConfig, MemoryControllerConfig,
+                               PAPER_COMBINED_CONFIG, PAPER_EVAL_CONFIG,
+                               SchedulerConfig)
 from repro.core.controller import MemoryController
 
 GOLDEN_DIR = os.path.normpath(os.path.join(
@@ -140,6 +141,34 @@ SERVING_CASES: dict = {
                                 starvation_cap=8, t_rfc=420,
                                 t_refi=9363)),
         _hog_victim_serving, "weighted", (4, 1)),
+    # RAS layer (PR 7): the pinned records carry the FaultStats block —
+    # the snapshot is the machine-readable witness that the storm and
+    # the controller's response reproduce bit-for-bit.
+    "faults_ecc_storm": (
+        dataclasses.replace(_SCHED_OFF, num_pes=2,
+                            dram_sched=DRAMSchedConfig(
+                                policy="frfcfs_cap", reorder_window=32,
+                                starvation_cap=8, t_rfc=420,
+                                t_refi=9363),
+                            faults=FaultConfig(
+                                seed=11, transient_ber=0.004,
+                                weak_row_fraction=0.02, weak_row_ber=0.5,
+                                due_fraction=0.25, max_replays=4,
+                                backoff_clocks=32,
+                                row_retire_threshold=2,
+                                refresh_escalate_threshold=40)),
+        _hog_victim_serving, "weighted", (4, 1)),
+    "faults_channel_outage": (
+        dataclasses.replace(_SCHED_OFF,
+                            channels=ChannelConfig(num_channels=2),
+                            dram_sched=DRAMSchedConfig(
+                                policy="frfcfs", reorder_window=16,
+                                t_rfc=420, t_refi=9363),
+                            faults=FaultConfig(
+                                seed=5,
+                                outage_windows=((0, 40000, 90000),
+                                                (1, 120000, 150000)))),
+        _poisson_serving, "round_robin", None),
 }
 
 
@@ -151,7 +180,7 @@ def _serving_record(name: str) -> dict:
         weights=weights, arrival_cycle=arr)
     agg = res.as_channel_result()
     s = res.serving
-    return {
+    rec = {
         "n_requests": res.n_requests,
         "makespan_fpga_cycles": res.makespan_fpga_cycles,
         "dram_makespan_fpga_cycles": res.dram_makespan_fpga_cycles,
@@ -172,6 +201,13 @@ def _serving_record(name: str) -> dict:
         "stage_requests": {st.name: [st.in_requests, st.out_requests]
                            for st in res.stages},
     }
+    if res.fault is not None:
+        # Fault cases pin the whole RAS observability block; fault-free
+        # cases keep their pre-RAS schema (the zero-rate degeneracy is
+        # "no fault key", not "a zero-filled fault key").
+        rec["fault"] = res.fault.as_dict()
+        rec["n_dropped_requests"] = int(res.dropped.sum())
+    return rec
 
 
 def golden_record(name: str) -> dict:

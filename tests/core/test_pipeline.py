@@ -332,14 +332,26 @@ def test_pipeline_cache_disabled_matches_legacy_entry_points(rng):
 @pytest.mark.parametrize("n", [0, 1])
 def test_pipeline_empty_and_single_request_streams(n, rng):
     """Boundary streams flow through the *full* composition (arbiter +
-    cache + scheduler + channels) without special-casing."""
+    cache + scheduler + channels) without special-casing. The
+    controller's ``simulate()`` refuses the empty trace (input
+    hardening — an all-zero result silently poisons derived numbers),
+    so the degenerate run is built from the pipeline primitives."""
     cfg = MemoryControllerConfig(
         channels=ChannelConfig(num_channels=4))
     mc = MemoryController(cfg)
     rows = rng.integers(0, 100, n)
     rw = rng.integers(0, 2, n)
     pe = rng.integers(0, cfg.num_pes, n)
-    res = mc.simulate(pe, rows, rw, 512)
+    if n == 0:
+        with pytest.raises(ValueError, match="empty trace"):
+            mc.simulate(pe, rows, rw, 512)
+        ctx = PipelineContext.from_config(cfg, mc.timings)
+        stream = RequestStream.from_rows(rows, rw, row_bytes=512,
+                                         pe_id=pe)
+        res = run_pipeline(stream, ctx,
+                           default_stages(ctx, ports=cfg.num_pes))
+    else:
+        res = mc.simulate(pe, rows, rw, 512)
     assert res.n_requests == n
     assert sum(res.requests_per_channel) == n
     assert len(res.per_channel) == 4
@@ -504,9 +516,16 @@ def test_as_channel_result_and_as_sim_result_fields(rng):
 
 
 def test_adapters_on_empty_pipeline():
-    mc = MemoryController(MemoryControllerConfig(
-        channels=ChannelConfig(num_channels=2)))
-    res = mc.simulate(None, np.empty(0, np.int64), None, 512)
+    """simulate() hard-fails on an empty trace; the legacy result
+    adapters still handle the degenerate pipeline run cleanly."""
+    cfg = MemoryControllerConfig(channels=ChannelConfig(num_channels=2))
+    mc = MemoryController(cfg)
+    with pytest.raises(ValueError, match="empty trace"):
+        mc.simulate(None, np.empty(0, np.int64), None, 512)
+    ctx = PipelineContext.from_config(cfg, mc.timings)
+    stream = RequestStream.from_rows(np.empty(0, np.int64), None,
+                                     row_bytes=512)
+    res = run_pipeline(stream, ctx, default_stages(ctx))
     ch = res.as_channel_result()
     assert ch.makespan_fpga_cycles == 0.0
     assert ch.requests_per_channel == [0, 0]

@@ -1,0 +1,85 @@
+"""Dedicated elastic-rescale unit tests: the TP-preservation policy,
+largest-fitting data axis, pod-granularity shrink, and the
+global-batch-via-grad-accum invariant.
+
+``test_fault_tolerance.py`` keeps the end-to-end smoke cases; the
+planner's arithmetic edges live here.
+"""
+
+import pytest
+
+from repro.runtime import elastic_mesh_shape, plan_rescale
+
+
+def _dp(plan):
+    sizes = dict(zip(plan.axis_names, plan.new_shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def test_mesh_shape_exact_and_truncated_fits():
+    assert elastic_mesh_shape(256, 16) == (16, 16)
+    # 250 chips / model 16 -> data axis is the largest multiple (15)
+    assert elastic_mesh_shape(250, 16) == (15, 16)
+    # single-pod meshes are 2-tuples, multi-pod 3-tuples
+    assert elastic_mesh_shape(512, 16, pods=2) == (2, 16, 16)
+    assert elastic_mesh_shape(510, 16, pods=2) == (2, 15, 16)
+
+
+def test_mesh_shape_never_shrinks_tp():
+    with pytest.raises(ValueError, match="cannot shrink TP"):
+        elastic_mesh_shape(8, 16)
+    # enough chips in total but not per pod: still refused
+    with pytest.raises(ValueError):
+        elastic_mesh_shape(24, 16, pods=2)
+
+
+@pytest.mark.parametrize("lost", [0, 16, 48, 112])
+def test_plan_preserves_model_axis_size(lost):
+    plan = plan_rescale((16, 16), ("data", "model"),
+                        available_devices=256 - lost, global_batch=512)
+    assert dict(zip(plan.axis_names, plan.new_shape))["model"] == 16
+
+
+def test_plan_no_loss_is_identity():
+    plan = plan_rescale((16, 16), ("data", "model"),
+                        available_devices=256, global_batch=512)
+    assert plan.new_shape == (16, 16)
+    assert plan.grad_accum == 1
+    assert plan.dropped_devices == 0
+
+
+@pytest.mark.parametrize("available,want_dp,want_accum", [
+    (128, 8, 2),    # half the fleet -> half the DP, 2x accumulation
+    (240, 15, 2),   # odd shrink: ceil(16/15) = 2 keeps the batch whole
+    (64, 4, 4),
+])
+def test_plan_preserves_global_batch(available, want_dp, want_accum):
+    plan = plan_rescale((16, 16), ("data", "model"),
+                        available_devices=available, global_batch=256)
+    assert _dp(plan) == want_dp
+    assert plan.grad_accum == want_accum
+    # the invariant the accumulation factor exists for: DP x accum
+    # covers the old DP, so the global batch per optimizer step holds
+    assert _dp(plan) * plan.grad_accum >= 16
+
+
+def test_plan_drops_partial_pod_wholesale():
+    """A pod is only kept with its full chip complement — a pod that
+    lost chips is written off entirely (its survivors are unusable
+    ICI-wise), and the data axis absorbs the rest."""
+    plan = plan_rescale((2, 8, 16), ("pod", "data", "model"),
+                        available_devices=200, global_batch=256)
+    # full pod = 8*16 = 128 chips; 200 available -> only 1 intact pod
+    assert plan.axis_names == ("data", "model")
+    assert plan.new_shape == (12, 16)       # 200 // 16 = 12 data shards
+    assert plan.grad_accum == 2             # old DP 16 -> new DP 12
+    assert plan.dropped_devices == 200 - 12 * 16
+
+
+def test_plan_keeps_both_pods_when_complete():
+    plan = plan_rescale((2, 8, 16), ("pod", "data", "model"),
+                        available_devices=300, global_batch=256)
+    assert plan.axis_names == ("pod", "data", "model")
+    assert plan.new_shape == (2, 9, 16)     # 150 per pod -> 9 data shards
+    assert plan.dropped_devices == 300 - 2 * 9 * 16
+    assert "grad_accum" in plan.describe()

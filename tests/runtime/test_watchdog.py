@@ -1,0 +1,105 @@
+"""Dedicated StepWatchdog unit tests: baseline warmup, the robust
+median baseline, patience/reset semantics, and alert plumbing.
+
+``test_fault_tolerance.py`` keeps the two end-to-end smoke cases; the
+state-machine edges live here. Step durations are simulated by
+rewinding ``_t0`` (the pattern the smoke tests established) so the
+suite never sleeps.
+"""
+
+import pytest
+
+from repro.runtime import StepWatchdog
+
+
+def _step(wd, dt, step):
+    wd.start()
+    wd._t0 -= dt
+    return wd.stop(step)
+
+
+def test_no_alerts_during_warmup():
+    """Until max(5, window//5) samples exist there is no baseline, so
+    even grossly slow steps cannot alert (nothing to compare against)."""
+    wd = StepWatchdog(window=50, threshold=2.0, patience=1)
+    for s in range(10):                      # warmup floor is 10 here
+        assert _step(wd, 10.0 if s % 2 else 0.01, s) is None
+    assert wd.alerts == []
+
+
+def test_baseline_is_median_not_mean():
+    """A few slow steps already inside the window must not drag the
+    baseline up — the median ignores them where a mean would not."""
+    wd = StepWatchdog(window=20, threshold=2.0, patience=1)
+    for s in range(8):
+        _step(wd, 0.01, s)
+    for s in range(8, 11):                   # 3 outliers of 19 samples
+        _step(wd, 1.0, s)
+    assert wd.median_step_s == pytest.approx(0.01, rel=0.2)
+    # a 3x-median step still trips against the 10ms baseline
+    alert = _step(wd, 0.03, 11)
+    assert alert is not None
+    assert alert.baseline_s == pytest.approx(0.01, rel=0.2)
+    assert alert.ratio == pytest.approx(3.0, rel=0.2)
+
+
+def test_patience_requires_consecutive_breaches():
+    """breach, recover, breach — the good step resets the counter, so
+    patience=2 never fires."""
+    wd = StepWatchdog(window=20, threshold=2.0, patience=2)
+    for s in range(10):
+        _step(wd, 0.01, s)
+    assert _step(wd, 0.1, 10) is None
+    assert _step(wd, 0.01, 11) is None       # resets _breaches
+    assert _step(wd, 0.1, 12) is None        # count restarts at 1
+    assert wd.alerts == []
+
+
+def test_breach_counter_resets_after_alert():
+    """Firing consumes the patience budget: the next alert needs a full
+    new run of consecutive breaches."""
+    wd = StepWatchdog(window=20, threshold=2.0, patience=2)
+    for s in range(10):
+        _step(wd, 0.01, s)
+    assert _step(wd, 0.08, 10) is None
+    assert _step(wd, 0.08, 11) is not None   # fires at patience=2
+    assert _step(wd, 0.08, 12) is None       # counter was reset
+    # note: breached steps enter the window, so keep the baseline fresh
+    assert len(wd.alerts) == 1
+
+
+def test_on_alert_callback_and_alert_fields():
+    seen = []
+    wd = StepWatchdog(window=20, threshold=2.0, patience=1,
+                      on_alert=seen.append)
+    for s in range(10):
+        _step(wd, 0.01, s)
+    alert = _step(wd, 0.05, 10)
+    assert seen == [alert] == wd.alerts
+    assert alert.step == 10
+    assert alert.step_time_s == pytest.approx(0.05, rel=0.2)
+    assert alert.ratio == pytest.approx(
+        alert.step_time_s / alert.baseline_s)
+
+
+def test_baseline_adapts_to_new_regime():
+    """A persistent slowdown becomes the *new* baseline once it fills
+    the window — the watchdog flags stragglers, not regime changes."""
+    wd = StepWatchdog(window=10, threshold=2.0, patience=1)
+    for s in range(10):
+        _step(wd, 0.01, s)
+    for s in range(10, 30):                  # 20 slow steps: window turns over
+        _step(wd, 0.05, s)
+    assert wd.median_step_s == pytest.approx(0.05, rel=0.2)
+    assert _step(wd, 0.06, 30) is None       # normal under the new regime
+    assert len(wd.times) == 10               # deque bounded by window
+
+
+def test_stop_without_start_asserts():
+    wd = StepWatchdog()
+    with pytest.raises(AssertionError):
+        wd.stop(0)
+
+
+def test_median_of_empty_history_is_zero():
+    assert StepWatchdog().median_step_s == 0.0
