@@ -1,0 +1,133 @@
+"""Tracing-overhead benchmark — what does observability cost?
+
+The telemetry contract (ARCHITECTURE §11) has two performance claims
+worth pinning machine-readably:
+
+* **off is free** — ``trace=None`` touches no code on the hot path, so
+  the untraced serving run must produce *bit-identical* results with
+  the telemetry module merely importable (asserted here, not timed:
+  bit-identity is the stronger statement); the off-path wall time is
+  still recorded so a regression that sneaks work onto the hot path
+  shows up as ``off_us`` drift in the perf trajectory;
+* **on is bounded** — tracing-on reruns the identical workload with a
+  :class:`~repro.core.telemetry.TraceRecorder` attached and records
+  the slowdown factor and reconstructed events/second. The replay is
+  O(events) python, so the factor is the price of the per-request
+  lens — it should stay in single digits.
+
+The workload is the open-loop multi-tenant serving shape (hog +
+victim, weighted arbitration, FR-FCFS-cap with refresh) at 1M requests
+full-size — large enough that both the timing run and the replay are
+in steady state. Writes ``BENCH_telemetry.json``; ``--small`` (~20k
+requests) is the CI perf-smoke configuration.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.core.config import (CacheConfig, DRAMSchedConfig,
+                               MemoryControllerConfig, SchedulerConfig)
+from repro.core.controller import MemoryController
+from repro.core.telemetry import CycleAttribution, TraceRecorder
+from repro.data.synthetic import hog_victim_workload
+
+ROW_BYTES = 4096
+SERVICE = DRAMSchedConfig(policy="frfcfs_cap", reorder_window=32,
+                          starvation_cap=16, t_rfc=420, t_refi=9363)
+CFG = MemoryControllerConfig(
+    num_pes=2,
+    scheduler=SchedulerConfig(enabled=False),
+    cache=CacheConfig(enabled=False),
+    dram_sched=SERVICE)
+
+
+def _workload(n: int):
+    n_victim = n // 5
+    rows, rw, pe, arr = hog_victim_workload(
+        np.random.default_rng(0), n_victim=n_victim,
+        n_hog=n - n_victim, victim_rate=0.01, hog_rate=0.12)
+    return pe, rows, rw, arr
+
+
+def _simulate(pe, rows, rw, arr, trace=None):
+    mc = MemoryController(CFG)
+    t0 = time.perf_counter()
+    res = mc.simulate(pe, rows, rw, ROW_BYTES, arbiter_policy="weighted",
+                      weights=(4, 1), arrival_cycle=arr, trace=trace)
+    return res, (time.perf_counter() - t0) * 1e6
+
+
+def run(n_requests: int = 1_000_000) -> dict:
+    pe, rows, rw, arr = _workload(n_requests)
+
+    # tracing off — the hot path; timed twice, keep the better (the
+    # first run also warms the allocator)
+    res_off, dt_off = _simulate(pe, rows, rw, arr)
+    res_off2, dt_off2 = _simulate(pe, rows, rw, arr)
+    dt_off = min(dt_off, dt_off2)
+    emit("perf_telemetry/tracing_off", dt_off,
+         f"n={n_requests}|makespan={round(res_off.makespan_fpga_cycles)}")
+
+    # tracing on — identical workload, recorder attached
+    rec = TraceRecorder()
+    res_on, dt_on = _simulate(pe, rows, rw, arr, trace=rec)
+
+    # off-path overhead is *zero by construction*: the traced run must
+    # reproduce every modeled number bit-for-bit
+    identical = (
+        res_off.makespan_fpga_cycles == res_on.makespan_fpga_cycles
+        and np.array_equal(res_off.serving.completion_fpga_cycles,
+                           res_on.serving.completion_fpga_cycles)
+        and res_off2.makespan_fpga_cycles == res_off.makespan_fpga_cycles)
+    assert identical, "tracing perturbed the model — contract violation"
+
+    slowdown = dt_on / dt_off
+    ev_per_s = rec.n_events / (dt_on * 1e-6)
+    emit("perf_telemetry/tracing_on", dt_on,
+         f"slowdown={slowdown:.2f}x|events={rec.n_events}|"
+         f"events_per_s={ev_per_s:.0f}")
+
+    t0 = time.perf_counter()
+    att = CycleAttribution.from_pipeline(res_on, rec)
+    dt_att = (time.perf_counter() - t0) * 1e6
+    ident = bool(np.array_equal(att.ltr_sum(),
+                                res_on.serving.sojourn_fpga_cycles))
+    assert ident, "attribution exact-sum identity violated"
+    emit("perf_telemetry/attribution", dt_att,
+         f"exact_sum={ident}|components={len(att.components)}")
+
+    results = {
+        "n_requests": n_requests,
+        "tracing_off_us": dt_off,
+        "tracing_on_us": dt_on,
+        "off_path_bit_identical": identical,
+        "on_path_slowdown": slowdown,
+        "n_events": int(rec.n_events),
+        "events_per_second": ev_per_s,
+        "attribution_us": dt_att,
+        "attribution_exact_sum": ident,
+        "makespan_fpga_cycles": float(res_off.makespan_fpga_cycles),
+    }
+    write_bench_json("telemetry", results)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--small", action="store_true",
+                    help="CI perf-smoke size (~20k requests)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="override trace length")
+    args = ap.parse_args()
+    n = args.n or (20_000 if args.small else 1_000_000)
+    print("name,us_per_call,derived")
+    run(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,21 +16,26 @@ probe reproduces one published artifact:
 The paper-claim probes (fig7 / fig7w / pipeline) also persist
 machine-readable ``BENCH_fig7.json`` / ``BENCH_fig7_write.json`` /
 ``BENCH_pipeline.json`` summaries so the repo's perf trajectory
-accumulates per PR (the pipeline probe runs at full size so the
-tracked artifact stays stable; CI smoke uses ``--small``);
-``benchmarks/perf_trace_engine.py`` (run separately — it is
-minutes-long at full size) writes ``BENCH_trace_engine.json`` for the
-simulator's own throughput, ``benchmarks/perf_channels.py`` (also
-separate) writes ``BENCH_channels.json`` for the multi-channel /
-multi-port front end, and ``benchmarks/perf_dram_sched.py`` (also
-separate) writes ``BENCH_dram_sched.json`` for the out-of-order DRAM
-command scheduler sweep.
+accumulates per PR (every probe runs at full size here so the tracked
+artifacts stay stable; CI smoke uses ``--small``). The serving-stack
+probes run from here too: ``perf_serving`` (open-loop latency/
+throughput + tenant isolation, ``BENCH_serving.json``),
+``perf_faults`` (RAS degradation sweep, ``BENCH_faults.json``) and
+``perf_telemetry`` (tracing-off bit-identity + tracing-on overhead,
+``BENCH_telemetry.json``). Only the minutes-long engine microbenches
+stay separate: ``benchmarks/perf_trace_engine.py`` writes
+``BENCH_trace_engine.json`` for the simulator's own throughput,
+``benchmarks/perf_channels.py`` writes ``BENCH_channels.json`` for
+the multi-channel / multi-port front end, and
+``benchmarks/perf_dram_sched.py`` writes ``BENCH_dram_sched.json``
+for the out-of-order DRAM command scheduler sweep.
 """
 
 from benchmarks import (autotune_bench, fig5_dma_resources,
                         fig6_scheduler_cost, fig7_workloads,
                         fig7_write_workloads, fig8_interface_width,
-                        fig9_schedule_time, perf_pipeline,
+                        fig9_schedule_time, perf_faults, perf_pipeline,
+                        perf_serving, perf_telemetry,
                         table3_cache_resources)
 from benchmarks.common import write_bench_json
 
@@ -45,9 +50,12 @@ def main() -> None:
     fig8_interface_width.run()
     fig9_schedule_time.run()
     autotune_bench.run()
-    # Full size, so the tracked BENCH_pipeline.json acceptance artifact
-    # is never overwritten with CI-size numbers (CI runs --small).
+    # Full size, so the tracked BENCH_*.json acceptance artifacts are
+    # never overwritten with CI-size numbers (CI runs --small).
     perf_pipeline.run()            # writes BENCH_pipeline.json itself
+    perf_serving.run()             # writes BENCH_serving.json itself
+    perf_faults.run()              # writes BENCH_faults.json itself
+    perf_telemetry.run()           # writes BENCH_telemetry.json itself
 
 
 if __name__ == "__main__":

@@ -795,6 +795,7 @@ def simulate_serving_channels(
     dram_sched: DRAMSchedConfig | None = None,
     use_seq_oracle: bool = False,
     faults=None,
+    trace=None,
 ) -> ServingChannelResult:
     """Arrival-aware front end: map → per-channel coupled
     admission+service (:func:`repro.core.timing.simulate_arrivals`) →
@@ -816,6 +817,12 @@ def simulate_serving_channels(
     :class:`~repro.core.faults.FaultStats` aggregate into ``fault``.
     ``faults=None`` (or an inactive config) is bit-identical to the
     fault-free walk.
+
+    ``trace`` (a :class:`repro.core.telemetry.TraceRecorder`) opts into
+    per-request lifecycle tracing: each channel's engine emits its
+    event stream into ``trace.channel(k)``, with the stable selection
+    indices as the request ids. ``trace=None`` is the untraced paths,
+    bit-identical.
     """
     from repro.core.timing import simulate_arrivals, simulate_faults
 
@@ -846,7 +853,9 @@ def simulate_serving_channels(
             arrival_fpga=arr[sel],
             pe_id=None if pe is None else pe[sel],
             num_ports=num_ports, arb_policy=policy, weights=weights,
-            engine=engine)
+            engine=engine,
+            trace=(None if trace is None
+                   else trace.channel(k, req_ids=sel)))
         sched_k = dram_sched if dram_sched is not None \
             else DRAMSchedConfig()
         if faults is None:

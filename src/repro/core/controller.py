@@ -246,12 +246,13 @@ class MemoryController:
     # subsets, property-tested bit-identical to their pre-refactor
     # outputs (tests/core/test_pipeline.py).
 
-    def _run(self, stream: RequestStream, *, faults=None,
+    def _run(self, stream: RequestStream, *, faults=None, trace=None,
              **stage_kwargs) -> PipelineResult:
         ctx = pipeline_mod.PipelineContext.from_config(self.config,
                                                        self.timings)
         if faults is not None:
             ctx.faults = faults
+        ctx.trace = trace
         stages = pipeline_mod.default_stages(ctx, **stage_kwargs)
         return pipeline_mod.run_pipeline(stream, ctx, stages)
 
@@ -260,7 +261,7 @@ class MemoryController:
         *, arbiter_policy: str = "round_robin", weights=None,
         coalesce_writes: bool = False,
         arrival_cycle=None, open_loop: bool | None = None,
-        faults=None,
+        faults=None, trace=None,
     ) -> PipelineResult:
         """Full-pipeline simulation of an irregular row trace — the
         paper's headline composition (cache engine *and* batch scheduler
@@ -298,6 +299,16 @@ class MemoryController:
         config; an inactive :class:`~repro.core.config.FaultConfig` is
         bit-identical to no fault layer at all (property-tested).
 
+        ``trace`` (a :class:`~repro.core.telemetry.TraceRecorder`)
+        opts into per-request lifecycle tracing (ARCHITECTURE §11):
+        every stage emits its events into the recorder — arrivals,
+        grants, cache verdicts, batch ids, reorder-window entries,
+        per-attempt DRAM issues, replays, completions, plus channel
+        timeline events — for the Perfetto exporter
+        (``repro.launch.tracing``) and the cycle-attribution report
+        (``repro.core.telemetry.CycleAttribution``). ``trace=None``
+        leaves every code path bit-identical (property-tested).
+
         Raises ``ValueError`` on an empty trace — a zero-request
         simulation is almost always an upstream bug (an over-filtered
         trace or a bad selection), so it fails loudly here instead of
@@ -325,13 +336,14 @@ class MemoryController:
             ctx.open_loop = True
             if faults is not None:
                 ctx.faults = faults
+            ctx.trace = trace
             stages = pipeline_mod.default_stages(
                 ctx, ports=ports, arbiter_policy=arbiter_policy,
                 weights=weights, cache=False)
             return pipeline_mod.run_pipeline(stream, ctx, stages)
         return self._run(
             stream,
-            ports=ports, faults=faults,
+            ports=ports, faults=faults, trace=trace,
             arbiter_policy=arbiter_policy, weights=weights,
             cache=True, coalesce_writes=coalesce_writes)
 

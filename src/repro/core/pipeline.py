@@ -229,6 +229,12 @@ class PipelineContext:
     serving_port_stats: "channels_mod.ArbiterStats | None" = None
     serving_dropped: np.ndarray | None = None       # DRAMService, by seq
     fault_stats: "object | None" = None             # DRAMService
+    #: opt-in per-request lifecycle recorder
+    #: (:class:`repro.core.telemetry.TraceRecorder`); ``None`` keeps
+    #: every stage on its unchanged hot path (bit-identical results,
+    #: property-tested). Duck-typed — the pipeline never imports
+    #: telemetry unless a recorder is attached.
+    trace: "object | None" = None
 
     @classmethod
     def from_config(cls, config: MemoryControllerConfig,
@@ -288,7 +294,8 @@ class ServingStats:
     mean_sojourn: float
     worst_sojourn: float
     sustained_req_per_cycle: float       # N / makespan
-    offered_req_per_cycle: float         # N / last arrival (inf if 0)
+    offered_req_per_cycle: float         # N / last arrival (0.0 for the
+    #                                      closed-loop degeneracy)
     idle_fpga_cycles: float              # summed channel idle time
     per_port: dict = dataclasses.field(default_factory=dict)
 
@@ -314,7 +321,8 @@ class ServingStats:
 
     @classmethod
     def from_arrays(cls, arrival, completion, service, pe_id,
-                    makespan: float, idle: float) -> "ServingStats":
+                    makespan: float, idle: float,
+                    open_loop: bool = True) -> "ServingStats":
         sojourn = completion - arrival
         per_port = {}
         for p in np.unique(pe_id):
@@ -323,12 +331,17 @@ class ServingStats:
                 n=int(m.sum()), **cls._percentiles(sojourn[m]))
         n = arrival.shape[0]
         last = float(arrival.max()) if n else 0.0
+        # The offered-load guard keys on open-loop-ness, not on ``last``:
+        # a nonempty closed-loop trace (all arrivals 0, e.g. the forced
+        # open_loop=True degeneracy harness) offers no arrival process
+        # at all — report 0.0, not n/0 = inf.
         return cls(
             arrival_fpga_cycles=arrival,
             completion_fpga_cycles=completion,
             service_fpga_cycles=service, pe_id=pe_id,
             sustained_req_per_cycle=n / makespan if makespan else 0.0,
-            offered_req_per_cycle=n / last if last else float("inf"),
+            offered_req_per_cycle=(n / last if (open_loop and last)
+                                   else 0.0),
             idle_fpga_cycles=idle, per_port=per_port,
             **cls._percentiles(sojourn))
 
@@ -477,6 +490,12 @@ class PortArbiterStage:
             order_parts.append(sel[perm])
             grants += stats.grants
             stalls += stats.stall_slots
+            if ctx.trace is not None:
+                seqs = stream.seq[sel][perm].tolist()
+                pes = stream.pe_id[sel][perm].tolist()
+                ctx.trace.stage_events.extend(
+                    ("grant_slot", _k, slot, s, p)
+                    for slot, (s, p) in enumerate(zip(seqs, pes)))
         order = (np.concatenate(order_parts) if order_parts
                  else np.empty(0, np.int64))
         port_stats = channels_mod.ArbiterStats(
@@ -514,8 +533,12 @@ class CacheFilterStage:
         if ctx.cache is None:
             raise ValueError("CacheFilterStage requires a cache config")
         key = (ctx.cache, ctx.channels, ctx.timings, ctx.faults)
-        if self.memo is not None and key in self.memo:
-            return self.memo[key]
+        # A memo hit would skip the per-request scan the event stream
+        # comes from — tracing runs bypass the memo entirely (read and
+        # write) so the events are always emitted and never stale.
+        memo = None if ctx.trace is not None else self.memo
+        if memo is not None and key in memo:
+            return memo[key]
         cache = ctx.cache
         amap = ctx.address_map()
         lb = cache.line_bytes
@@ -531,9 +554,18 @@ class CacheFilterStage:
             n_hits += ch_hits
             n_wb += res.n_writebacks
             hits_per_channel.append(ch_hits)
+            if ctx.trace is not None:
+                hits_l = res.hits.tolist()
+                seqs = sub.seq.tolist()
+                ctx.trace.stage_events.extend(
+                    ("cache", k, s, "hit" if h else "miss")
+                    for s, h in zip(seqs, hits_l))
             kept = sub.select(np.flatnonzero(res.keep))
             kept.tags["writeback"] = np.zeros(len(kept), bool)
             wb_src = sub.select(res.wb_pos)
+            if ctx.trace is not None:
+                ctx.trace.stage_events.extend(
+                    ("cache_wb", k, int(s)) for s in wb_src.seq)
             wb_local = res.wb_line * lb
             wb = RequestStream(
                 addr=amap.global_addr(np.full(res.n_writebacks, k,
@@ -559,8 +591,8 @@ class CacheFilterStage:
             {"hit_rate": n_hits / max(1, n), "n_hits": n_hits,
              "n_writebacks": n_wb, "write_policy": cache.write_policy,
              "hits_per_channel": hits_per_channel}))
-        if self.memo is not None:
-            self.memo[key] = result
+        if memo is not None:
+            memo[key] = result
         return result
 
 
@@ -616,6 +648,14 @@ class BatchSchedulerStage:
                 timings=ctx.timings, coalesce_writes=self.coalesce_writes)
             n_batches += scheduler_mod.count_batches(stream.rw[sel],
                                                      config=sch)
+            if ctx.trace is not None:
+                seqs = stream.seq[sel].tolist()
+                for bi, batch in enumerate(scheduler_mod.form_batches_typed(
+                        stream.local_addr[sel], stream.rw[sel],
+                        config=sch)):
+                    ctx.trace.stage_events.extend(
+                        ("batch", k, seqs[pos], bi)
+                        for pos in batch.seq.tolist())
             m = served.shape[0]
             kf = np.full(m, k, np.int64)
             parts.append(RequestStream(
@@ -659,10 +699,15 @@ class DRAMServiceStage:
         # The default config degenerates to strict FIFO — skip the
         # scheduler wrapper entirely (it would recompute turnarounds
         # and allocate an unread service_order on the hot path; the
-        # results are bit-identical either way, property-tested).
+        # results are bit-identical either way, property-tested). A
+        # tracing run takes the scheduler wrapper even then: the event
+        # stream needs service_order, and the wrapper's window-1
+        # degeneracy is bit-identical (only the result subtype widens).
         if sched is not None and sched.effective_window == 1 \
-                and not sched.t_refi:
+                and not sched.t_refi and ctx.trace is None:
             sched = None
+        if sched is None and ctx.trace is not None:
+            sched = DRAMSchedConfig()
         per_channel: list[SimResult] = []
         n_ref = 0
         for _k, sel in _per_channel(stream, ctx.num_channels):
@@ -671,9 +716,11 @@ class DRAMServiceStage:
                     stream.local_addr[sel], ctx.timings,
                     rw=stream.rw[sel]))
             else:
+                ct = None if ctx.trace is None else \
+                    ctx.trace.channel(_k, req_ids=stream.seq[sel])
                 res = simulate_dram_sched(
                     stream.local_addr[sel], ctx.timings, sched,
-                    rw=stream.rw[sel])
+                    rw=stream.rw[sel], trace=ct)
                 n_ref += res.n_refreshes
                 per_channel.append(res)
         makespan = max((r.total_fpga_cycles for r in per_channel),
@@ -707,9 +754,12 @@ class DRAMServiceStage:
         fault_agg = None
         n_ref = 0
         for k, sel in _per_channel(stream, ctx.num_channels):
+            ct = None if ctx.trace is None else \
+                ctx.trace.channel(k, req_ids=stream.seq[sel])
             res = simulate_faults(
                 stream.local_addr[sel], ctx.timings, sched,
-                rw=stream.rw[sel], faults=ctx.faults, channel=k)
+                rw=stream.rw[sel], faults=ctx.faults, channel=k,
+                trace=ct)
             n_ref += res.n_refreshes
             fault_agg = res.fault if fault_agg is None \
                 else fault_agg.combine(res.fault)
@@ -781,7 +831,9 @@ class DRAMServiceStage:
                 pe_id=(stream.pe_id[sel] if nports is not None
                        and nports > 1 else None),
                 num_ports=nports, arb_policy=ctx.arb_policy,
-                weights=ctx.arb_weights)
+                weights=ctx.arb_weights,
+                trace=(None if ctx.trace is None else
+                       ctx.trace.channel(k, req_ids=stream.seq[sel])))
             if fault_on:
                 res = simulate_faults(
                     stream.local_addr[sel], ctx.timings, sched,
@@ -894,6 +946,7 @@ def run_pipeline(stream: RequestStream, ctx: PipelineContext,
                  stages: Sequence) -> PipelineResult:
     """Push ``stream`` through ``stages`` and assemble the result."""
     n_in = len(stream)
+    open_loop_in = stream.has_arrivals
     stats_list: list[StageStats] = []
     for stage in stages:
         stream, stats = stage.run(stream, ctx)
@@ -923,7 +976,10 @@ def run_pipeline(stream: RequestStream, ctx: PipelineContext,
         serving = ServingStats.from_arrays(
             ctx.serving_arrival, ctx.serving_completion + pre,
             ctx.serving_service, ctx.serving_pe,
-            makespan=total, idle=ctx.serving_idle)
+            makespan=total, idle=ctx.serving_idle,
+            open_loop=open_loop_in)
+    if ctx.trace is not None:
+        ctx.trace.finalize(ctx, total)
     return PipelineResult(
         makespan_fpga_cycles=total,
         stages=stats_list,

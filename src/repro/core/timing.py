@@ -471,6 +471,7 @@ def simulate_dram_sched_seq(
     timings: DRAMTimings = DDR4_2400,
     sched: DRAMSchedConfig = DRAMSchedConfig(),
     rw: np.ndarray | None = None,
+    trace=None,
 ) -> SchedSimResult:
     """Request-at-a-time oracle for the out-of-order DRAM command
     scheduler — THE specification the vectorized path
@@ -499,6 +500,12 @@ def simulate_dram_sched_seq(
     With ``window=1`` and refresh disabled this degenerates exactly to
     the per-bank FIFO classification of :func:`simulate_dram_access`
     (bit-identical, including turnarounds).
+
+    ``trace`` (a :class:`repro.core.telemetry.ChannelTrace`) makes this
+    oracle emit the per-request lifecycle event stream natively — the
+    event schema's specification, which the fast path reconstructs via
+    :func:`repro.core.telemetry.replay_sched_events` (property-tested
+    tuple-for-tuple equal). ``trace=None`` changes nothing.
     """
     addrs = np.asarray(addrs, dtype=np.int64).ravel()
     n = addrs.size
@@ -520,13 +527,18 @@ def simulate_dram_sched_seq(
     n_hit = n_conflict = n_first = n_ref = turn = 0
     last_dir = -1
     order: list[int] = []
+    ev = None if trace is None else trace.events
     while nxt < n or pending:
         while nxt < n and len(pending) < w:
+            if ev is not None:
+                ev.append(("window", cycle, nxt))
             pending.append(nxt)
             bypass[nxt] = 0
             nxt += 1
         if t_refi:
             while cycle >= next_ref:
+                if ev is not None:
+                    ev.append(("refresh", cycle, cycle + sched.t_rfc))
                 cycle += sched.t_rfc
                 n_ref += 1
                 open_row.clear()
@@ -552,12 +564,15 @@ def simulate_dram_sched_seq(
         b, r = int(banks[idx]), int(rows[idx])
         if b not in open_row:
             n_first += 1
+            cls = "first"
             cost = timings.t_rcd + timings.t_cl
         elif open_row[b] == r:
             n_hit += 1
+            cls = "hit"
             cost = timings.t_cl
         else:
             n_conflict += 1
+            cls = "conflict"
             cost = timings.t_rp + timings.t_rcd + timings.t_cl
         open_row[b] = r
         cost += timings.t_burst
@@ -566,15 +581,23 @@ def simulate_dram_sched_seq(
             if last_dir == 1 and d == 0:
                 turn += timings.t_wtr
                 cost += timings.t_wtr
+                if ev is not None:
+                    ev.append(("turn", cycle, "wtr", timings.t_wtr))
             elif last_dir == 0 and d == 1:
                 turn += timings.t_rtw
                 cost += timings.t_rtw
+                if ev is not None:
+                    ev.append(("turn", cycle, "rtw", timings.t_rtw))
             last_dir = d
+        if ev is not None:
+            ev.append(("issue", cycle, idx, b, r, cls, cost, 1, "ok"))
         cycle += cost
         for j in pending:
             if j < idx:
                 bypass[j] += 1
         order.append(idx)
+        if ev is not None:
+            ev.append(("complete", cycle, idx))
     return _sched_result(n_first, n_hit, n_conflict, n, turn, n_ref,
                          sched.t_rfc, timings, order)
 
@@ -585,6 +608,7 @@ def simulate_dram_sched(
     sched: DRAMSchedConfig = DRAMSchedConfig(),
     rw: np.ndarray | None = None,
     engine: str = "auto",
+    trace=None,
 ) -> SchedSimResult:
     """Out-of-order DRAM command scheduling — vectorized, bit-identical
     to :func:`simulate_dram_sched_seq`.
@@ -595,11 +619,16 @@ def simulate_dram_sched(
     everything else runs the chunked event walk in
     ``repro.core.trace_engine`` (hit runs at array speed, one python
     event per serviced miss / refresh / forced starvation pick).
+
+    ``trace`` requests the lifecycle event stream: the sequential
+    engine emits natively, the fast engines reconstruct it from their
+    outputs after the timing run (``trace=None`` is the zero-overhead
+    hot path — no code on it changes).
     """
     if engine not in ("auto", "fast", "sequential"):
         raise ValueError(f"engine={engine!r} must be auto|fast|sequential")
     if engine == "sequential":
-        return simulate_dram_sched_seq(addrs, timings, sched, rw)
+        return simulate_dram_sched_seq(addrs, timings, sched, rw, trace)
     addrs = np.asarray(addrs, dtype=np.int64).ravel()
     n = addrs.size
     if n == 0:
@@ -607,14 +636,20 @@ def simulate_dram_sched(
     if sched.effective_window == 1 and not sched.t_refi:
         base = simulate_dram_access(addrs, timings, rw=rw)
         turn = 0 if rw is None else turnaround_cycles(rw, timings)
-        return SchedSimResult(
+        res = SchedSimResult(
             total_fpga_cycles=base.total_fpga_cycles,
             row_hits=base.row_hits, row_conflicts=base.row_conflicts,
             first_accesses=base.first_accesses,
             turnaround_dram_cycles=turn,
             service_order=np.arange(n, dtype=np.int64))
+        if trace is not None:
+            from repro.core import telemetry
+            telemetry.replay_sched_events(addrs, timings, sched, rw, res,
+                                          trace)
+        return res
     from repro.core import trace_engine
-    return trace_engine.simulate_dram_sched_fast(addrs, timings, sched, rw)
+    return trace_engine.simulate_dram_sched_fast(addrs, timings, sched, rw,
+                                                 trace=trace)
 
 
 # ---------------------------------------------------------------------------
@@ -712,6 +747,7 @@ def simulate_arrivals_seq(
     num_ports: int | None = None,
     arb_policy: str = "round_robin",
     weights=None,
+    trace=None,
 ) -> ServingSimResult:
     """Request-at-a-time oracle for the *open-loop* channel — THE
     specification for arrival gating, idle-gap advance and service-paced
@@ -754,6 +790,13 @@ def simulate_arrivals_seq(
     :func:`simulate_dram_sched_seq`, multi-port to
     ``arbitrate_ports_seq`` composed with it (same permutation, counts
     and makespan — the closed-loop degeneracy property tests).
+
+    ``trace`` (a :class:`repro.core.telemetry.ChannelTrace`) emits the
+    lifecycle event stream natively — grants, idle gaps, refresh
+    windows, turnarounds, issues, completions — which
+    :func:`repro.core.telemetry.replay_arrival_events` reconstructs
+    from the fast path's outputs (property-tested tuple-for-tuple
+    equal). ``trace=None`` changes nothing.
     """
     addrs, n, rw_arr, arr, ports, nports = _serving_trace(
         addrs, timings, rw, arrival_fpga, pe_id, num_ports)
@@ -786,6 +829,7 @@ def simulate_arrivals_seq(
     grant_order: list[int] = []
     granted_port: list[int] = []
     order: list[int] = []
+    ev = None if trace is None else trace.events
 
     def eligible(p: int) -> bool:
         h = heads[p]
@@ -815,22 +859,32 @@ def simulate_arrivals_seq(
             bypass.append(0)
             grant_order.append(idx)
             granted_port.append(g)
+            if ev is not None:
+                ev.append(("grant", anchor + off, idx, g))
         if not pending:                      # -- idle-gap advance
             target = min(arr[queues[p][heads[p]]] for p in range(nports)
                          if heads[p] < len(queues[p]))
+            now0 = anchor + off
             if t_refi:
                 while next_ref <= target:
                     n_ref += 1
                     open_row.clear()
                     end = next_ref + t_rfc
+                    if ev is not None:
+                        ev.append(("refresh", next_ref, end))
                     next_ref += t_refi
                     if end > target:
                         target = end         # arrived mid-refresh
+            if ev is not None:
+                ev.append(("idle", now0, target))
             idle += target - (anchor + off)
             anchor, off = target, 0
             continue
         if t_refi:
             while anchor + off >= next_ref:  # refresh precedes the issue
+                if ev is not None:
+                    ev.append(("refresh", anchor + off,
+                               anchor + off + t_rfc))
                 off += t_rfc
                 n_ref += 1
                 open_row.clear()
@@ -853,15 +907,19 @@ def simulate_arrivals_seq(
                         break
         idx = pending.pop(pick)
         bypass.pop(pick)
+        now_t = anchor + off
         b, r = int(banks[idx]), int(rows[idx])
         if b not in open_row:
             n_first += 1
+            cls = "first"
             cost = timings.t_rcd + timings.t_cl
         elif open_row[b] == r:
             n_hit += 1
+            cls = "hit"
             cost = timings.t_cl
         else:
             n_conflict += 1
+            cls = "conflict"
             cost = timings.t_rp + timings.t_rcd + timings.t_cl
         open_row[b] = r
         cost += timings.t_burst
@@ -870,10 +928,16 @@ def simulate_arrivals_seq(
             if last_dir == 1 and d == 0:
                 turn += timings.t_wtr
                 cost += timings.t_wtr
+                if ev is not None:
+                    ev.append(("turn", now_t, "wtr", timings.t_wtr))
             elif last_dir == 0 and d == 1:
                 turn += timings.t_rtw
                 cost += timings.t_rtw
+                if ev is not None:
+                    ev.append(("turn", now_t, "rtw", timings.t_rtw))
             last_dir = d
+        if ev is not None:
+            ev.append(("issue", now_t, idx, b, r, cls, cost, 1, "ok"))
         off += cost
         for i in range(pick):        # entries granted earlier were bypassed
             bypass[i] += 1
@@ -881,6 +945,8 @@ def simulate_arrivals_seq(
         service[idx] = cost
         order.append(idx)
         served += 1
+        if ev is not None:
+            ev.append(("complete", anchor + off, idx))
 
     return ServingSimResult(
         total_fpga_cycles=(anchor + off) * timings.clock_ratio,
@@ -907,6 +973,7 @@ def simulate_arrivals(
     arb_policy: str = "round_robin",
     weights=None,
     engine: str = "auto",
+    trace=None,
 ) -> ServingSimResult:
     """Open-loop channel service — the fast engine, bit-identical to
     :func:`simulate_arrivals_seq` (property-tested over arrival process
@@ -914,19 +981,21 @@ def simulate_arrivals(
     rw). Single-port streams run the chunked frontier scan in
     ``repro.core.trace_engine`` (row-hit runs at array speed, truncated
     by arrival/refresh/window boundaries); multi-port streams run its
-    optimized admission-coupled event loop."""
+    optimized admission-coupled event loop. ``trace`` requests the
+    lifecycle event stream (oracle-emitted or fast-path-reconstructed;
+    ``trace=None`` is the unchanged hot path)."""
     if engine not in ("auto", "fast", "sequential"):
         raise ValueError(f"engine={engine!r} must be auto|fast|sequential")
     if engine == "sequential":
         return simulate_arrivals_seq(
             addrs, timings, sched, rw, arrival_fpga=arrival_fpga,
             pe_id=pe_id, num_ports=num_ports, arb_policy=arb_policy,
-            weights=weights)
+            weights=weights, trace=trace)
     from repro.core import trace_engine
     return trace_engine.simulate_arrivals_fast(
         addrs, timings, sched, rw, arrival_fpga=arrival_fpga,
         pe_id=pe_id, num_ports=num_ports, arb_policy=arb_policy,
-        weights=weights)
+        weights=weights, trace=trace)
 
 
 # ---------------------------------------------------------------------------
@@ -974,6 +1043,7 @@ def simulate_faults_seq(
     num_ports: int | None = None,
     arb_policy: str = "round_robin",
     weights=None,
+    trace=None,
 ) -> FaultSimResult:
     """Request-at-a-time oracle for the *fault-injected* open-loop
     channel — THE specification for error injection, ECC handling,
@@ -1020,6 +1090,15 @@ def simulate_faults_seq(
     With ``faults=None`` or an inactive config no draw, queue, or
     clock expression differs from :func:`simulate_arrivals_seq` — the
     zero-rate degeneracy is bit-identical (property-tested).
+
+    ``trace`` (a :class:`repro.core.telemetry.ChannelTrace`) emits the
+    lifecycle event stream natively — the serving events plus replay
+    re-admissions, outage windows, per-attempt issue outcomes
+    (ok/corrected/silent/failed), replay enqueues and drops — which
+    :func:`repro.core.telemetry.replay_fault_events` reconstructs from
+    the fast path's outputs and the deterministic fault draws
+    (property-tested tuple-for-tuple equal). ``trace=None`` changes
+    nothing.
     """
     import heapq
 
@@ -1071,6 +1150,7 @@ def simulate_faults_seq(
     st = F.FaultStats()
     retired_seq: list[tuple[int, int]] = []
     dropped_by_port: dict[int, int] = {}
+    ev = None if trace is None else trace.events
 
     def eligible(p: int) -> bool:
         h = heads[p]
@@ -1082,6 +1162,8 @@ def simulate_faults_seq(
                 _, _, ridx = heapq.heappop(replay_q)
                 pending.append(ridx)         # replays re-enter first
                 bypass.append(0)
+                if ev is not None:
+                    ev.append(("readmit", anchor + off, ridx))
                 continue
             g = -1
             if priority:
@@ -1105,20 +1187,27 @@ def simulate_faults_seq(
             bypass.append(0)
             grant_order.append(idx)
             granted_port.append(g)
+            if ev is not None:
+                ev.append(("grant", anchor + off, idx, g))
         if not pending:                      # -- idle-gap advance
             targets = [arr[queues[p][heads[p]]] for p in range(nports)
                        if heads[p] < len(queues[p])]
             if replay_q:
                 targets.append(replay_q[0][0])
             target = min(targets)
+            now0 = anchor + off
             if t_refi:
                 while next_ref <= target:
                     n_ref += 1
                     open_row.clear()
                     end = next_ref + t_rfc
+                    if ev is not None:
+                        ev.append(("refresh", next_ref, end))
                     next_ref += t_refi_eff
                     if end > target:
                         target = end         # arrived mid-refresh
+            if ev is not None:
+                ev.append(("idle", now0, target))
             idle += target - (anchor + off)
             anchor, off = target, 0
             continue
@@ -1132,9 +1221,13 @@ def simulate_faults_seq(
                         n_ref += 1
                         open_row.clear()
                         end = next_ref + t_rfc
+                        if ev is not None:
+                            ev.append(("refresh", next_ref, end))
                         next_ref += t_refi_eff
                         if end > target:
                             target = end
+                if ev is not None:
+                    ev.append(("outage", now, target))
                 st.outage_dram_cycles += target - now
                 anchor, off = target, 0
                 jumped = True
@@ -1143,6 +1236,9 @@ def simulate_faults_seq(
             continue
         if t_refi:
             while anchor + off >= next_ref:  # refresh precedes the issue
+                if ev is not None:
+                    ev.append(("refresh", anchor + off,
+                               anchor + off + t_rfc))
                 off += t_rfc
                 n_ref += 1
                 open_row.clear()
@@ -1166,29 +1262,36 @@ def simulate_faults_seq(
                         break
         idx = pending.pop(pick)
         bypass.pop(pick)
+        now_t = anchor + off
         b, r_nat = int(banks[idx]), int(rows[idx])
         r = retired.get(r_nat, r_nat)
         if r != r_nat:
             st.spare_issues += 1
         if b not in open_row:
             n_first += 1
+            cls = "first"
             cost = timings.t_rcd + timings.t_cl
         elif open_row[b] == r:
             n_hit += 1
+            cls = "hit"
             cost = timings.t_cl
         else:
             n_conflict += 1
+            cls = "conflict"
             cost = timings.t_rp + timings.t_rcd + timings.t_cl
         open_row[b] = r
         cost += timings.t_burst
+        tpen = None
         if rw_arr is not None:
             d = int(rw_arr[idx])
             if last_dir == 1 and d == 0:
                 turn += timings.t_wtr
                 cost += timings.t_wtr
+                tpen = ("wtr", timings.t_wtr)
             elif last_dir == 0 and d == 1:
                 turn += timings.t_rtw
                 cost += timings.t_rtw
+                tpen = ("rtw", timings.t_rtw)
             last_dir = d
         attempts[idx] += 1
         att = int(attempts[idx])
@@ -1202,6 +1305,7 @@ def simulate_faults_seq(
             u = F.error_uniform(fc, channel, idx, att)
             errored = u < p_err
         failed = False
+        outcome = "ok"
         if errored:
             st.n_injected += 1
             if fc.row_retire_threshold and r < F.SPARE_ROW_BASE:
@@ -1225,17 +1329,26 @@ def simulate_faults_seq(
                 if secded:
                     if u < p_err * fc.due_fraction:
                         failed = True            # detected-uncorrectable
+                        outcome = "failed"
                     else:
                         st.n_corrected += 1
                         st.correction_dram_cycles += fc.ecc_correction_clocks
                         cost += fc.ecc_correction_clocks
+                        outcome = "corrected"
                 else:
                     st.n_silent += 1
+                    outcome = "silent"
             else:
                 if fc.write_crc:
                     failed = True                # link CRC retry
+                    outcome = "failed"
                 else:
                     st.n_silent += 1
+                    outcome = "silent"
+        if ev is not None:
+            if tpen is not None:
+                ev.append(("turn", now_t, tpen[0], tpen[1]))
+            ev.append(("issue", now_t, idx, b, r, cls, cost, att, outcome))
         off += cost
         for i in range(pick):
             bypass[i] += 1
@@ -1251,13 +1364,19 @@ def simulate_faults_seq(
                 dropped_by_port[port] = dropped_by_port.get(port, 0) + 1
                 completion[idx] = anchor + off
                 served += 1
+                if ev is not None:
+                    ev.append(("drop", anchor + off, idx, att))
             else:
                 rseq += 1
-                heapq.heappush(replay_q, (anchor + off
-                                          + fc.backoff_for(att), rseq, idx))
+                ready = anchor + off + fc.backoff_for(att)
+                heapq.heappush(replay_q, (ready, rseq, idx))
+                if ev is not None:
+                    ev.append(("replay", anchor + off, idx, att, ready))
         else:
             completion[idx] = anchor + off
             served += 1
+            if ev is not None:
+                ev.append(("complete", anchor + off, idx))
 
     st.rows_retired = tuple(retired_seq)
     st.dropped_by_port = dropped_by_port
@@ -1289,24 +1408,28 @@ def simulate_faults(
     arb_policy: str = "round_robin",
     weights=None,
     engine: str = "auto",
+    trace=None,
 ) -> FaultSimResult:
     """Fault-injected channel service — the fast engine, bit-identical
     to :func:`simulate_faults_seq`. An inactive fault config (``None``
     or nothing to inject on any channel) delegates to the fault-free
     fast path and wraps its result — the zero-rate degeneracy costs
-    nothing."""
+    nothing (and emits the fault-free event stream, which is what the
+    oracle emits too when nothing injects). ``trace`` requests the
+    lifecycle event stream; ``trace=None`` is the unchanged hot
+    path."""
     if engine not in ("auto", "fast", "sequential"):
         raise ValueError(f"engine={engine!r} must be auto|fast|sequential")
     if engine == "sequential":
         return simulate_faults_seq(
             addrs, timings, sched, rw, faults=faults, channel=channel,
             arrival_fpga=arrival_fpga, pe_id=pe_id, num_ports=num_ports,
-            arb_policy=arb_policy, weights=weights)
+            arb_policy=arb_policy, weights=weights, trace=trace)
     if faults is None or not faults.injects:
         base = simulate_arrivals(
             addrs, timings, sched, rw, arrival_fpga=arrival_fpga,
             pe_id=pe_id, num_ports=num_ports, arb_policy=arb_policy,
-            weights=weights)
+            weights=weights, trace=trace)
         n = base.completion_fpga_cycles.size
         return FaultSimResult(
             total_fpga_cycles=base.total_fpga_cycles,
@@ -1327,7 +1450,7 @@ def simulate_faults(
     return trace_engine.simulate_faults_fast(
         addrs, timings, sched, rw, faults=faults, channel=channel,
         arrival_fpga=arrival_fpga, pe_id=pe_id, num_ports=num_ports,
-        arb_policy=arb_policy, weights=weights)
+        arb_policy=arb_policy, weights=weights, trace=trace)
 
 
 def modeled_bandwidth_gbps(

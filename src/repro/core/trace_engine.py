@@ -584,7 +584,7 @@ def auto_parallel_ok(state, line_ids, *, rw=None, write_lines=None,
 # Out-of-order DRAM command scheduling — the chunked fast path
 # ---------------------------------------------------------------------------
 
-def simulate_dram_sched_fast(addrs, timings, sched, rw=None):
+def simulate_dram_sched_fast(addrs, timings, sched, rw=None, *, trace=None):
     """Fast path of :func:`repro.core.timing.simulate_dram_sched` —
     bit-identical to ``simulate_dram_sched_seq`` (property-tested over
     policy x window x cap x refresh x rw x timings).
@@ -608,6 +608,10 @@ def simulate_dram_sched_fast(addrs, timings, sched, rw=None):
 
     Row-hit runs stream at array speed; python touches one request per
     serviced miss, forced pick, or refresh.
+
+    ``trace`` keeps this hot path untouched: the timing run completes
+    first, then :func:`repro.core.telemetry.replay_sched_events`
+    reconstructs the oracle's event stream from ``service_order``.
     """
     from repro.core.timing import _sched_result
 
@@ -883,13 +887,19 @@ def simulate_dram_sched_fast(addrs, timings, sched, rw=None):
             deferred.extend(int(m) for m in (f + miss_rel))
         f += take
         grow = chunk * 2 if take == chunk else 32
-    return _sched_result(n_first, n_hit, n_conflict, n, turn, n_ref,
-                         t_rfc, timings, out)
+    res = _sched_result(n_first, n_hit, n_conflict, n, turn, n_ref,
+                        t_rfc, timings, out)
+    if trace is not None:
+        from repro.core import telemetry
+        telemetry.replay_sched_events(addrs, timings, sched, rw_arr, res,
+                                      trace)
+    return res
 
 
 def simulate_arrivals_fast(addrs, timings, sched, rw=None, *,
                            arrival_fpga=None, pe_id=None, num_ports=None,
-                           arb_policy="round_robin", weights=None):
+                           arb_policy="round_robin", weights=None,
+                           trace=None):
     """Fast path of :func:`repro.core.timing.simulate_arrivals` —
     bit-identical to ``simulate_arrivals_seq`` (property-tested over
     arrival process x ports x arbiter policy x DRAM policy x window x
@@ -912,6 +922,11 @@ def simulate_arrivals_fast(addrs, timings, sched, rw=None, *,
     Both paths track the clock as ``anchor + offset`` (float anchor set
     only at idle jumps, exact integer offset) exactly like the oracle,
     so batched integer cost sums land on bit-identical timestamps.
+
+    ``trace`` keeps both hot paths untouched: the timing run completes
+    first, then :func:`repro.core.telemetry.replay_arrival_events`
+    reconstructs the oracle's event stream from ``grant_order`` /
+    ``granted_port`` / ``service_order``.
     """
     from repro.core.timing import (ServingSimResult, _serving_trace,
                                    _serving_weights)
@@ -923,11 +938,18 @@ def simulate_arrivals_fast(addrs, timings, sched, rw=None, *,
         return ServingSimResult(total_fpga_cycles=0.0, row_hits=0,
                                 row_conflicts=0, first_accesses=0)
     if nports == 1:
-        return _arrivals_fast_single(addrs, n, timings, sched, rw_arr, arr,
-                                     ServingSimResult)
-    return _arrivals_fast_multi(addrs, n, timings, sched, rw_arr, arr,
-                                ports, nports, arb_policy, weights,
-                                ServingSimResult)
+        res = _arrivals_fast_single(addrs, n, timings, sched, rw_arr, arr,
+                                    ServingSimResult)
+    else:
+        res = _arrivals_fast_multi(addrs, n, timings, sched, rw_arr, arr,
+                                   ports, nports, arb_policy, weights,
+                                   ServingSimResult)
+    if trace is not None:
+        from repro.core import telemetry
+        telemetry.replay_arrival_events(
+            addrs, timings, sched, rw_arr, arrival_fpga=arrival_fpga,
+            pe_id=pe_id, num_ports=num_ports, result=res, trace=trace)
+    return res
 
 
 def _arrivals_fast_single(addrs, n, timings, sched, rw_arr, arr, result_cls):
@@ -1400,7 +1422,8 @@ def _arrivals_fast_multi(addrs, n, timings, sched, rw_arr, arr, ports,
 def simulate_faults_fast(addrs, timings, sched, rw=None, *,
                          faults, channel=0, arrival_fpga=None,
                          pe_id=None, num_ports=None,
-                         arb_policy="round_robin", weights=None):
+                         arb_policy="round_robin", weights=None,
+                         trace=None):
     """Fast path of :func:`repro.core.timing.simulate_faults` —
     bit-identical to ``simulate_faults_seq`` (property-tested over
     fault rate x ECC mode x replay bound x backoff x outage x ports x
@@ -1416,6 +1439,11 @@ def simulate_faults_fast(addrs, timings, sched, rw=None, *,
     evaluating it early cannot perturb anything); only replay attempts
     — rare by construction — fall back to the scalar hash, which is
     the same wrapping arithmetic.
+
+    ``trace`` keeps this hot path untouched: the timing run completes
+    first, then :func:`repro.core.telemetry.replay_fault_events`
+    reconstructs the oracle's event stream from the recorded
+    permutations plus the replayable fault draws.
     """
     import heapq
 
@@ -1699,7 +1727,7 @@ def simulate_faults_fast(addrs, timings, sched, rw=None, *,
     st.rows_retired = tuple(retired_seq)
     st.dropped_by_port = dropped_by_port
     attempts_np = np.asarray(attempts, np.int64)
-    return FaultSimResult(
+    res = FaultSimResult(
         total_fpga_cycles=(anchor + off) * timings.clock_ratio,
         row_hits=n_hit, row_conflicts=n_conflict, first_accesses=n_first,
         n_refreshes=n_ref, refresh_dram_cycles=n_ref * t_rfc,
@@ -1711,3 +1739,10 @@ def simulate_faults_fast(addrs, timings, sched, rw=None, *,
         granted_port=granted_port[:granted],
         idle_dram_cycles=idle,
         fault=st, attempts=attempts_np, dropped=dropped)
+    if trace is not None:
+        from repro.core import telemetry
+        telemetry.replay_fault_events(
+            addrs, timings, sched, rw_arr, faults=fc, channel=channel,
+            arrival_fpga=arrival_fpga, pe_id=pe_id, num_ports=num_ports,
+            result=res, trace=trace)
+    return res

@@ -66,6 +66,13 @@ class ServeStats:
     modeled_makespan_cycles: float = 0.0
     modeled_per_tenant: Dict[int, dict] = dataclasses.field(
         default_factory=dict)
+    # per-tenant SLO attainment + cycle-attribution blame (populated
+    # only when the server was built with ``slo_cycles``): tenant ->
+    # {n, attainment, violations, dominant_blame} where dominant_blame
+    # is the attribution component (telemetry.COMPONENTS) contributing
+    # the most cycles to that tenant's violating requests.
+    modeled_slo_attainment: Dict[int, dict] = dataclasses.field(
+        default_factory=dict)
 
 
 class Server:
@@ -76,7 +83,8 @@ class Server:
                  mem: MemoryControllerConfig | None = None,
                  arb_policy: str = "round_robin",
                  arb_weights=None,
-                 decode_interval_cycles: int = 64):
+                 decode_interval_cycles: int = 64,
+                 slo_cycles: float | None = None):
         self.cfg = get_arch(arch, smoke=smoke)
         if self.cfg.family == "encoder":
             raise ValueError("encoder-only architectures do not decode")
@@ -86,6 +94,10 @@ class Server:
         self.arb_policy = arb_policy
         self.arb_weights = arb_weights
         self.decode_interval_cycles = int(decode_interval_cycles)
+        #: modeled per-request sojourn SLO (FPGA cycles). Setting it
+        #: turns on lifecycle tracing of the KV replay so the serve
+        #: stats carry per-tenant attainment + attribution blame.
+        self.slo_cycles = None if slo_cycles is None else float(slo_cycles)
         self.params = self.lm.init(jax.random.key(0))
         self._prefill = jax.jit(
             lambda p, b, ml: self.lm.prefill(p, b, max_len=ml),
@@ -172,20 +184,51 @@ class Server:
     def model_memory(self, batches: List[List[Request]],
                      stats: ServeStats) -> None:
         """Replay the KV stream through the memory controller's
-        open-loop serving pipeline and record modeled latency."""
+        open-loop serving pipeline and record modeled latency.
+
+        With ``slo_cycles`` set, the replay runs under a
+        :class:`~repro.core.telemetry.TraceRecorder` and each tenant's
+        SLO attainment is attributed: violating requests' sojourns are
+        decomposed (:class:`~repro.core.telemetry.CycleAttribution`)
+        and the dominant component — the answer to "*why* is this
+        tenant missing its SLO" (arbitration starvation vs reorder
+        slip vs refresh vs replay ...) — lands in the stats.
+        """
         pe, rows, rw, arr = self.kv_trace(batches)
         if rows.size == 0:
             return
+        trace = None
+        if self.slo_cycles is not None:
+            from repro.core.telemetry import TraceRecorder
+            trace = TraceRecorder()
         res = self.controller.simulate(
             pe, rows, rw, KV_PAGE_BYTES,
             arbiter_policy=self.arb_policy, weights=self.arb_weights,
-            arrival_cycle=arr, open_loop=True)
+            arrival_cycle=arr, open_loop=True, trace=trace)
         s = res.serving
         stats.modeled_p50_cycles = s.p50_sojourn
         stats.modeled_p95_cycles = s.p95_sojourn
         stats.modeled_p99_cycles = s.p99_sojourn
         stats.modeled_makespan_cycles = res.makespan_fpga_cycles
         stats.modeled_per_tenant = s.per_port
+        if trace is not None:
+            from repro.core.telemetry import CycleAttribution
+            att = CycleAttribution.from_pipeline(res, trace)
+            for p in np.unique(att.pe_id):
+                m = att.pe_id == p
+                viol = m & (att.sojourn > self.slo_cycles)
+                blame = None
+                if viol.any():
+                    blame = max(
+                        ((k, float(v[viol].sum()))
+                         for k, v in att.components.items()),
+                        key=lambda kv: kv[1])[0]
+                stats.modeled_slo_attainment[int(p)] = {
+                    "n": int(m.sum()),
+                    "violations": int(viol.sum()),
+                    "attainment": float(1.0 - viol.sum() / m.sum()),
+                    "dominant_blame": blame,
+                }
 
     def serve(self, requests: List[Request]) -> ServeStats:
         stats = ServeStats()
@@ -205,9 +248,13 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--slo-cycles", type=float, default=None,
+                    help="modeled sojourn SLO; turns on per-tenant "
+                         "attainment attribution")
     args = ap.parse_args()
 
-    server = Server(args.arch, smoke=args.smoke)
+    server = Server(args.arch, smoke=args.smoke,
+                    slo_cycles=args.slo_cycles)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(
@@ -224,6 +271,11 @@ def main() -> None:
           f"p50={stats.modeled_p50_cycles:.1f} "
           f"p95={stats.modeled_p95_cycles:.1f} "
           f"p99={stats.modeled_p99_cycles:.1f}")
+    for p, rec in sorted(stats.modeled_slo_attainment.items()):
+        print(f"[serve] tenant {p}: SLO attainment "
+              f"{100 * rec['attainment']:.1f}% "
+              f"({rec['violations']}/{rec['n']} violations, "
+              f"blame={rec['dominant_blame']})")
     print(f"[serve] sample output: {reqs[0].output}")
 
 

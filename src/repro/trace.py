@@ -1,0 +1,187 @@
+"""``python -m repro.trace`` — trace one run, export Perfetto JSON +
+cycle attribution.
+
+The observability front door (ARCHITECTURE §11): run a workload through
+``MemoryController.simulate`` with a
+:class:`~repro.core.telemetry.TraceRecorder` attached, then
+
+* write the Chrome-trace-event / Perfetto JSON
+  (``repro.launch.tracing``) — open it at https://ui.perfetto.dev;
+* write the :class:`~repro.core.telemetry.CycleAttribution` rollup
+  (component totals, per-tenant, top-K hot rows) as JSON;
+* print the human-readable attribution summary.
+
+The positional argument is either
+
+* a **golden case name** from ``tests/core/golden_cases.py``
+  (``serving_hog_victim_weighted``, ``faults_ecc_storm``,
+  ``paper_eval_gcn``, ...) — resolved against the repo checkout, so the
+  CLI traces exactly the workload the regression suite pins; or
+* a **JSON config path** describing a synthetic workload::
+
+      {"workload": "poisson",         // or "hog_victim"
+       "n": 3000, "seed": 3, "rate": 0.05,
+       "num_pes": 1, "arb": "round_robin", "weights": null,
+       "policy": "frfcfs", "window": 16, "starvation_cap": 16,
+       "t_rfc": 420, "t_refi": 9363}
+
+Examples::
+
+    python -m repro.trace serving_hog_victim_weighted --validate
+    python -m repro.trace my_workload.json --out t.json --attr a.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import os
+import sys
+
+import numpy as np
+
+
+def _find_golden_cases():
+    """Locate ``tests/core/golden_cases.py`` (repo checkout or cwd) and
+    import it as a standalone module; ``None`` when not found."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(os.path.dirname(here))
+    for root in (os.getcwd(), repo):
+        path = os.path.join(root, "tests", "core", "golden_cases.py")
+        if os.path.exists(path):
+            spec = importlib.util.spec_from_file_location(
+                "repro_golden_cases", path)
+            mod = importlib.util.module_from_spec(spec)
+            spec.loader.exec_module(mod)
+            return mod
+    return None
+
+
+def _run_golden(name: str, recorder):
+    from repro.core.controller import MemoryController
+    gc = _find_golden_cases()
+    if gc is None:
+        raise SystemExit("golden_cases.py not found — run from the repo "
+                         "checkout or pass a JSON config path")
+    if name in gc.SERVING_CASES:
+        config, workload, arb_policy, weights = gc.SERVING_CASES[name]
+        rows, rw, pe, arr = workload()
+        return MemoryController(config).simulate(
+            pe, rows, rw, gc.ROW_BYTES, arbiter_policy=arb_policy,
+            weights=weights, arrival_cycle=arr, trace=recorder)
+    if name in gc.CASES:
+        config, trace_fn, multiport = gc.CASES[name]
+        rows, rw = trace_fn()
+        pe = None
+        if multiport:
+            pe = np.random.default_rng(2).integers(
+                0, config.num_pes, rows.shape[0])
+        return MemoryController(config).simulate(
+            pe, rows, rw, gc.ROW_BYTES, trace=recorder)
+    known = sorted(list(gc.CASES) + list(gc.SERVING_CASES))
+    raise SystemExit(f"unknown golden case {name!r}; known: "
+                     + ", ".join(known))
+
+
+def _run_config(path: str, recorder):
+    from repro.core.config import (DRAMSchedConfig,
+                                   MemoryControllerConfig,
+                                   SchedulerConfig, CacheConfig)
+    from repro.core.controller import MemoryController
+    from repro.data import synthetic
+
+    with open(path) as fh:
+        cfg = json.load(fh)
+    n = int(cfg.get("n", 3000))
+    rng = np.random.default_rng(int(cfg.get("seed", 0)))
+    workload = cfg.get("workload", "poisson")
+    if workload == "hog_victim":
+        rows, rw, pe, arr = synthetic.hog_victim_workload(
+            rng, n_victim=n // 5, n_hog=n - n // 5,
+            victim_rate=float(cfg.get("rate", 0.05)) / 5,
+            hog_rate=float(cfg.get("rate", 0.05)))
+        num_pes = max(2, int(cfg.get("num_pes", 2)))
+    elif workload == "poisson":
+        rows = (np.floor(np.minimum(np.clip(rng.random(n), 1e-12, 1.0)
+                                    ** -5.0, 2.0 ** 62)).astype(np.int64)
+                - 1) % 8192
+        rw = (rng.random(n) < 0.1).astype(np.int32)
+        arr = synthetic.poisson_arrivals(rng, n,
+                                         float(cfg.get("rate", 0.05)))
+        num_pes = int(cfg.get("num_pes", 1))
+        pe = rng.integers(0, num_pes, n) if num_pes > 1 else None
+    else:
+        raise SystemExit(f"unknown workload {workload!r} "
+                         "(poisson | hog_victim)")
+    mc_config = MemoryControllerConfig(
+        num_pes=num_pes,
+        scheduler=SchedulerConfig(enabled=False),
+        cache=CacheConfig(enabled=False),
+        dram_sched=DRAMSchedConfig(
+            policy=cfg.get("policy", "frfcfs"),
+            reorder_window=int(cfg.get("window", 16)),
+            starvation_cap=int(cfg.get("starvation_cap", 16)),
+            t_rfc=int(cfg.get("t_rfc", 0)),
+            t_refi=int(cfg.get("t_refi", 0))))
+    weights = cfg.get("weights")
+    return MemoryController(mc_config).simulate(
+        pe, rows, rw, 4096,
+        arbiter_policy=cfg.get("arb", "round_robin"),
+        weights=None if weights is None else tuple(weights),
+        arrival_cycle=arr, trace=recorder)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.trace",
+        description="Trace one run; export Perfetto JSON + cycle "
+                    "attribution.")
+    ap.add_argument("case", help="golden case name or JSON config path")
+    ap.add_argument("--out", default=None,
+                    help="Perfetto trace output path "
+                         "(default <case>.trace.json)")
+    ap.add_argument("--attr", default=None,
+                    help="attribution JSON output path "
+                         "(default <case>.attr.json)")
+    ap.add_argument("--validate", action="store_true",
+                    help="re-validate the exported JSON against the "
+                         "trace-event schema and print the counts")
+    ap.add_argument("--top-k", type=int, default=10,
+                    help="hot rows to report (default 10)")
+    ap.add_argument("--max-slices", type=int, default=None,
+                    help="cap per-request sojourn slices in the export")
+    args = ap.parse_args(argv)
+
+    from repro.core.telemetry import CycleAttribution, TraceRecorder
+    from repro.launch import tracing
+
+    recorder = TraceRecorder()
+    if args.case.endswith(".json") or os.path.sep in args.case:
+        result = _run_config(args.case, recorder)
+        stem = os.path.splitext(os.path.basename(args.case))[0]
+    else:
+        result = _run_golden(args.case, recorder)
+        stem = args.case
+
+    out = args.out or f"{stem}.trace.json"
+    attr_path = args.attr or f"{stem}.attr.json"
+    counts = tracing.write_chrome_trace(
+        out, recorder, max_request_slices=args.max_slices)
+    att = CycleAttribution.from_pipeline(result, recorder)
+    tracing.write_attribution(attr_path, att, top_k=args.top_k)
+
+    print(f"trace: {out} ({counts['X']} slices, {counts['C']} counter "
+          f"samples, {recorder.n_events} recorded events)")
+    print(f"attribution: {attr_path}")
+    if args.validate:
+        with open(out) as fh:
+            counts = tracing.validate_chrome_trace(json.load(fh))
+        print(f"validated: {counts}")
+    print()
+    print(att.summary_text(top_k=args.top_k))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

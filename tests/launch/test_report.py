@@ -1,0 +1,114 @@
+"""launch/report.py — dry-run/roofline table rendering, locked down by a
+small fixture round-trip.
+
+The report module renders EXPERIMENTS.md tables from the dry-run JSONL
+records; these tests pin the record → table contract (latest-per-cell
+dedup, failed-cell rows, byte formatting, mesh filtering, summary
+extrema) so a rendering change can't silently corrupt the published
+tables.
+"""
+
+import json
+
+import pytest
+
+from repro.launch import report
+
+
+def _rec(cell, *, compile_s=12.0, state=3 << 30, temp=200 << 20,
+         flops=1.5e15, compute_s=0.02, memory_s=0.04, collective_s=0.01,
+         bottleneck="memory", useful=0.9, roofline=0.5, **extra):
+    r = {
+        "cell": cell, "compile_s": compile_s,
+        "state_bytes_per_device": state,
+        "memory_analysis": {"temp_size_in_bytes": temp},
+        "hlo_flops": flops,
+        "collectives_detail": {"all-gather": 1 << 20,
+                               "all-reduce": 2 << 20},
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "bottleneck": bottleneck,
+        "useful_flops_ratio": useful, "roofline_fraction": roofline,
+    }
+    r.update(extra)
+    return r
+
+
+@pytest.fixture
+def jsonl(tmp_path):
+    recs = [
+        _rec("gpt-125m/base/1pod", roofline=0.7),
+        _rec("gpt-125m/base/1pod", roofline=0.6),     # later wins dedup
+        _rec("yi-34b/base/1pod", roofline=0.3, collective_s=0.05),
+        _rec("yi-34b/base/2pod", roofline=0.4),
+        {"cell": "broken/base/1pod", "error": "OOM during compile xyz"},
+    ]
+    p = tmp_path / "dryrun.jsonl"
+    with open(p, "w") as fh:
+        for r in recs:
+            fh.write(json.dumps(r) + "\n")
+    return str(p)
+
+
+def test_load_dedups_latest_per_cell(jsonl):
+    recs = report.load(jsonl)
+    cells = sorted(r["cell"] for r in recs)
+    assert cells == ["broken/base/1pod", "gpt-125m/base/1pod",
+                     "yi-34b/base/1pod", "yi-34b/base/2pod"]
+    gpt = next(r for r in recs if r["cell"] == "gpt-125m/base/1pod")
+    assert gpt["roofline_fraction"] == 0.6      # the later record won
+
+
+@pytest.mark.parametrize("b,expect", [
+    (512, "0K"), (100 * 1024, "100K"),
+    (5 << 20, "5.0M"), (3 << 30, "3.00G"),
+])
+def test_fmt_bytes(b, expect):
+    assert report.fmt_bytes(b) == expect
+
+
+def test_dryrun_table_rows_and_failures(jsonl):
+    recs = report.load(jsonl)
+    table = report.dryrun_table(recs)
+    lines = table.splitlines()
+    assert lines[0].startswith("| cell |")
+    assert lines[1].startswith("|---")
+    # one row per cell, sorted, failures rendered inline
+    assert len(lines) == 2 + 4
+    assert "FAILED: OOM during compile xyz" in table
+    # the arch/shape splits off the mesh column
+    assert "| gpt-125m/base | 1pod |" in table
+    assert "3.00G" in table and "200.0M" in table
+
+
+def test_roofline_table_filters_mesh(jsonl):
+    recs = report.load(jsonl)
+    t1 = report.roofline_table(recs, "1pod")
+    t2 = report.roofline_table(recs, "2pod")
+    assert "gpt-125m/base" in t1 and "yi-34b/base" in t1
+    assert "gpt-125m/base" not in t2 and "yi-34b/base" in t2
+    assert "**memory**" in t1
+    # failed cells never make it into the roofline
+    assert "broken" not in t1
+
+
+def test_summary_extrema(jsonl):
+    recs = report.load(jsonl)
+    s = report.summary(recs)
+    assert "cells compiled OK: 3; failed: 1" in s
+    # worst single-pod roofline fraction is yi-34b (0.3)
+    assert "worst roofline fraction: yi-34b/base/1pod" in s
+    assert "most collective-exposed: yi-34b/base/1pod" in s
+
+
+def test_round_trip_through_main_render(jsonl, capsys):
+    """The full ``main``-shaped render path on the fixture file."""
+    recs = report.load(jsonl)
+    out = "\n".join([report.summary(recs), report.dryrun_table(recs),
+                     report.roofline_table(recs, "1pod"),
+                     report.roofline_table(recs, "2pod")])
+    # every surviving cell appears somewhere, and the output is
+    # markdown-table shaped (every table line pipes out)
+    for cell in ("gpt-125m/base", "yi-34b/base", "broken/base"):
+        assert cell in out
+    for line in report.dryrun_table(recs).splitlines():
+        assert line.startswith("|") and line.endswith("|")
