@@ -1,0 +1,159 @@
+"""Batched autotune benchmark — the full TUNE grid as one stacked sweep.
+
+Scores the whole default autotune grid (batch × associativity × lines ×
+dma, optionally × channels × DRAM-sched variants) two ways and proves
+they agree: ``tune(engine="oracle")`` walks the grid one candidate at a
+time through the staged pipeline; ``tune(engine="batched")`` hoists the
+dma axis, vectorizes the constant-arrival batch plan, and classifies
+the strict-FIFO service term with one fused key sort per variant.
+Tables and argmin must be bit-identical — the benchmark asserts it on
+every row before recording wall time and configs/second.
+
+Workload choice matters for the headline: on *line-granular* gather
+traces (64-byte rows over a 1M-entry table) the cache filter stays on
+its vectorized path and the per-config scheduling cost dominates, so
+the batched engine's win is visible end to end. On *row-granular*
+traces (row-sized strides) the shared, memoized cache filter falls back
+to its sequential LRU walk and dominates both engines equally — that
+row is recorded too, honestly labeled, so the JSON shows where the
+speedup comes from.
+
+Writes ``BENCH_autotune.json``; ``--small`` (~50k requests) is the CI
+perf-smoke configuration.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.core.autotune import tune
+
+FULL_SIZE = 200_000
+
+
+def _grid_size(res) -> int:
+    return len(res.table)
+
+
+def _tune_both(rows, row_bytes, label, results, *, assert_speedup=None,
+               note=None, **grid):
+    t0 = time.perf_counter()
+    oracle = tune(rows, row_bytes, engine="oracle", **grid)
+    t_oracle = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batched = tune(rows, row_bytes, engine="batched", **grid)
+    t_batched = time.perf_counter() - t0
+
+    identical = (oracle.table == batched.table
+                 and oracle.config == batched.config
+                 and oracle.modeled_cycles == batched.modeled_cycles
+                 and oracle.candidates_evaluated
+                 == batched.candidates_evaluated)
+    assert identical, f"batched tune diverged from oracle on {label}"
+
+    speedup = t_oracle / t_batched
+    if assert_speedup is not None:
+        assert speedup >= assert_speedup, (
+            f"{label}: batched speedup {speedup:.1f}x below the "
+            f"{assert_speedup}x floor")
+    rec = {
+        "n_requests": int(len(rows)),
+        "grid_points": _grid_size(oracle),
+        "candidates_evaluated": oracle.candidates_evaluated,
+        "oracle_s": round(t_oracle, 3),
+        "batched_s": round(t_batched, 3),
+        "speedup": round(speedup, 1),
+        "oracle_configs_per_sec": round(
+            oracle.candidates_evaluated / t_oracle, 1),
+        "batched_configs_per_sec": round(
+            batched.candidates_evaluated / t_batched, 1),
+        "identical_table_and_argmin": identical,
+        "best_modeled_cycles": batched.modeled_cycles,
+    }
+    if note:
+        rec["note"] = note
+    results["workloads"][label] = rec
+    emit(f"perf_autotune/{label}", t_batched * 1e6,
+         f"speedup={speedup:.1f}x|grid={rec['grid_points']}|"
+         f"batched_cfg_per_s={rec['batched_configs_per_sec']}|"
+         f"identical={identical}")
+    return rec
+
+
+def run(n_requests: int = FULL_SIZE) -> dict:
+    rng = np.random.default_rng(0)
+    results: dict = {
+        "benchmark": "batched_autotune_grid",
+        "unit": "wall_seconds",
+        "n_requests": n_requests,
+        "note": ("tune(engine='batched') vs tune(engine='oracle') on "
+                 "identical grids; tables and argmin asserted "
+                 "bit-identical on every row"),
+        "workloads": {},
+    }
+
+    # Headline: uniform 64B-line gathers over a 1M-entry table — low
+    # hit rate keeps the post-filter miss stream large, so per-config
+    # plan+service cost dominates and the batched engine's win is the
+    # end-to-end number. Full default grid (384 points).
+    full = n_requests >= FULL_SIZE
+    _tune_both(rng.integers(0, 1 << 20, n_requests).astype(np.int64),
+               64, "uniform_gather_1M_64B", results,
+               assert_speedup=10.0 if full else None)
+
+    # Skewed gathers — zipf(1.05) over the same table; mild reuse, the
+    # filter still vectorizes, speedup stays >10x at full size.
+    _tune_both(((rng.zipf(1.05, n_requests) - 1) % (1 << 20))
+               .astype(np.int64),
+               64, "zipf1.05_gather_1M_64B", results)
+
+    # Extended sweep axes: channels × DRAM-sched variants on top of the
+    # cache/batch grid — the "(cache × channels × sched × window)" axis
+    # from the issue, at a quarter of the trace to keep the oracle side
+    # affordable.
+    _tune_both(rng.integers(0, 1 << 20, max(1, n_requests // 4))
+               .astype(np.int64),
+               64, "extended_grid_chan_sched", results,
+               num_channels=(1, 2),
+               mapping_policies=("row_interleave", "xor"),
+               dram_sched_policies=("fifo", "frfcfs"),
+               reorder_windows=(1, 8))
+
+    # Row-granular GCN-like trace: row-sized strides alias the cache
+    # sets, the shared memoized filter walks its sequential LRU path,
+    # and both engines pay it equally — recorded so the headline's
+    # provenance is explicit.
+    _tune_both(((rng.zipf(1.2, n_requests) - 1) % 2048).astype(np.int64),
+               4096, "gcn_row_granular_4KB", results,
+               note=("shared sequential cache-filter walk dominates "
+                     "both engines on row-granular traces; speedup "
+                     "here measures only the scheduling/service term"))
+
+    head = results["workloads"]["uniform_gather_1M_64B"]
+    results["headline_speedup_batched_vs_oracle"] = head["speedup"]
+    results["all_rows_identical"] = all(
+        w["identical_table_and_argmin"]
+        for w in results["workloads"].values())
+
+    write_bench_json("autotune", results)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--small", action="store_true",
+                    help="CI perf-smoke size (~50k requests)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="override trace length")
+    args = ap.parse_args()
+    n = args.n or (50_000 if args.small else FULL_SIZE)
+    print("name,us_per_call,derived")
+    run(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -152,10 +152,16 @@ def bench_workload(name, lids, rw, *, seq_sample, results):
         "speedup": round((n / (t_mod_new + t_cache_new))
                          / (ns / (t_mod_old + t_cache_old)), 2),
     }
+    oracle_rates = rates(t_oracle_old, t_oracle_new)
+    # The compacted-lane oracle must never lose to the sequential walk
+    # (the pre-compaction GCN regression was 0.97x — pinned here).
+    assert oracle_rates["speedup"] >= 1.0, (
+        f"{name}: hit_rate_oracle slower than the sequential oracle "
+        f"({oracle_rates['speedup']}x)")
     results["workloads"][name] = {
         "modeled_access_time": rates(t_mod_old, t_mod_new),
         "simulate_trace_rw": rates(t_cache_old, t_cache_new),
-        "hit_rate_oracle": rates(t_oracle_old, t_oracle_new),
+        "hit_rate_oracle": oracle_rates,
         "pipeline": pipeline,
     }
     emit(f"perf_trace_engine/{name}",

@@ -20,9 +20,12 @@ accumulates per PR (every probe runs at full size here so the tracked
 artifacts stay stable; CI smoke uses ``--small``). The serving-stack
 probes run from here too: ``perf_serving`` (open-loop latency/
 throughput + tenant isolation, ``BENCH_serving.json``),
-``perf_faults`` (RAS degradation sweep, ``BENCH_faults.json``) and
-``perf_telemetry`` (tracing-off bit-identity + tracing-on overhead,
-``BENCH_telemetry.json``). Only the minutes-long engine microbenches
+``perf_autotune`` (batched vs one-at-a-time full-grid tune,
+``BENCH_autotune.json``), ``perf_faults`` (RAS degradation sweep,
+``BENCH_faults.json``) and ``perf_telemetry`` (tracing-off
+bit-identity + tracing-on overhead, ``BENCH_telemetry.json``). A
+per-benchmark wall-time table prints at the end of the run. Only the
+minutes-long engine microbenches
 stay separate: ``benchmarks/perf_trace_engine.py`` writes
 ``BENCH_trace_engine.json`` for the simulator's own throughput,
 ``benchmarks/perf_channels.py`` writes ``BENCH_channels.json`` for
@@ -31,31 +34,52 @@ the multi-channel / multi-port front end, and
 for the out-of-order DRAM command scheduler sweep.
 """
 
+import time
+
 from benchmarks import (autotune_bench, fig5_dma_resources,
                         fig6_scheduler_cost, fig7_workloads,
                         fig7_write_workloads, fig8_interface_width,
-                        fig9_schedule_time, perf_faults, perf_pipeline,
-                        perf_serving, perf_telemetry,
+                        fig9_schedule_time, perf_autotune, perf_faults,
+                        perf_pipeline, perf_serving, perf_telemetry,
                         table3_cache_resources)
 from benchmarks.common import write_bench_json
 
 
 def main() -> None:
     print("name,us_per_call,derived")
-    table3_cache_resources.run()
-    fig5_dma_resources.run()
-    fig6_scheduler_cost.run()
-    write_bench_json("fig7", fig7_workloads.run())
-    write_bench_json("fig7_write", fig7_write_workloads.run())
-    fig8_interface_width.run()
-    fig9_schedule_time.run()
-    autotune_bench.run()
+    timings: list[tuple[str, float]] = []
+
+    def timed(name, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        timings.append((name, time.perf_counter() - t0))
+        return out
+
+    timed("table3", table3_cache_resources.run)
+    timed("fig5", fig5_dma_resources.run)
+    timed("fig6", fig6_scheduler_cost.run)
+    write_bench_json("fig7", timed("fig7", fig7_workloads.run))
+    write_bench_json("fig7_write",
+                     timed("fig7w", fig7_write_workloads.run))
+    timed("fig8", fig8_interface_width.run)
+    timed("fig9", fig9_schedule_time.run)
+    timed("autotune_convergence", autotune_bench.run)
     # Full size, so the tracked BENCH_*.json acceptance artifacts are
     # never overwritten with CI-size numbers (CI runs --small).
-    perf_pipeline.run()            # writes BENCH_pipeline.json itself
-    perf_serving.run()             # writes BENCH_serving.json itself
-    perf_faults.run()              # writes BENCH_faults.json itself
-    perf_telemetry.run()           # writes BENCH_telemetry.json itself
+    timed("perf_pipeline", perf_pipeline.run)   # BENCH_pipeline.json
+    timed("perf_serving", perf_serving.run)     # BENCH_serving.json
+    timed("perf_autotune", perf_autotune.run)   # BENCH_autotune.json
+    timed("perf_faults", perf_faults.run)       # BENCH_faults.json
+    timed("perf_telemetry", perf_telemetry.run)  # BENCH_telemetry.json
+
+    # Wall-time summary — where a full `python -m benchmarks.run`
+    # actually spends its minutes.
+    total = sum(dt for _, dt in timings)
+    width = max(len(n) for n, _ in timings)
+    print(f"\n{'benchmark':<{width}}  wall_s  share")
+    for name, dt in sorted(timings, key=lambda t: -t[1]):
+        print(f"{name:<{width}}  {dt:6.1f}  {dt / total:5.1%}")
+    print(f"{'total':<{width}}  {total:6.1f}")
 
 
 if __name__ == "__main__":

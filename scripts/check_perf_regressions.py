@@ -1,0 +1,119 @@
+"""CI perf-regression gate — fresh smoke ratios vs committed baselines.
+
+The perf-smoke job reruns every benchmark at ``--small`` size, which
+overwrites the ``BENCH_*.json`` files in the workspace. This script
+compares the *headline speedup ratios* of those fresh files against the
+versions committed at HEAD (via ``git show``): absolute cycle counts
+and wall times scale with trace length and machine, but the fast-vs-
+oracle ratios are size-insensitive enough to gate on. A fresh ratio
+below ``TOLERANCE`` (default 0.7) times its committed value fails the
+build — that is a real engine regression, not smoke-size noise.
+
+Keys whose ratios are noise-bound at parity (e.g. the serving load
+sweep, which is simulation-bound by design) are deliberately not
+gated; the table below is the single source of truth for what is.
+
+Usage::
+
+    PYTHONPATH=src python scripts/check_perf_regressions.py [--ref HEAD]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+TOLERANCE = 0.7
+
+# bench file -> dotted paths of the gated headline ratios
+GATED: dict[str, list[str]] = {
+    "BENCH_trace_engine.json": [
+        "workloads.gcn_style.pipeline.speedup",
+        "workloads.cnn_style.pipeline.speedup",
+        "workloads.gcn_style.hit_rate_oracle.speedup",
+        "workloads.cnn_style.hit_rate_oracle.speedup",
+    ],
+    "BENCH_dram_sched.json": [
+        "fast_path_speedup_vs_oracle_w32",
+    ],
+    "BENCH_serving.json": [
+        "simulator.speedup",
+    ],
+    "BENCH_autotune.json": [
+        "headline_speedup_batched_vs_oracle",
+    ],
+}
+
+
+def _dig(obj, path: str):
+    for part in path.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def _committed(name: str, ref: str) -> dict | None:
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{ref}:{name}"], cwd=REPO, check=True,
+            capture_output=True, text=True).stdout
+    except subprocess.CalledProcessError:
+        return None
+    return json.loads(blob)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the committed baselines")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    args = ap.parse_args()
+
+    failures, checked = [], 0
+    for name, paths in GATED.items():
+        fresh_path = REPO / name
+        if not fresh_path.exists():
+            failures.append(f"{name}: fresh file missing — did the "
+                            "smoke step run?")
+            continue
+        base = _committed(name, args.ref)
+        if base is None:
+            print(f"  {name}: no committed baseline at {args.ref} — "
+                  "skipping (first PR for this benchmark)")
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        for path in paths:
+            want, got = _dig(base, path), _dig(fresh, path)
+            if want is None:
+                print(f"  {name}:{path}: not in baseline — skipping")
+                continue
+            checked += 1
+            if got is None:
+                failures.append(f"{name}:{path}: present in baseline "
+                                "but missing from fresh run")
+                continue
+            floor = args.tolerance * float(want)
+            status = "ok" if float(got) >= floor else "FAIL"
+            print(f"  {name}:{path}: fresh {got} vs committed {want} "
+                  f"(floor {floor:.2f}) {status}")
+            if status == "FAIL":
+                failures.append(
+                    f"{name}:{path}: {got} < {args.tolerance} x {want}")
+
+    if failures:
+        print(f"\nperf gate: {len(failures)} regression(s):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nperf gate: {checked} headline ratio(s) within "
+          f"{args.tolerance}x of committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

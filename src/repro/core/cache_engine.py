@@ -358,6 +358,84 @@ def _empty_filter_result(n: int) -> FilterResult:
                         wb_line=np.empty(0, np.int64))
 
 
+#: once at most this many sets still have pending beats, the lockstep
+#: walk hands their residual (serial hot-set) subtraces to the dict
+#: walk — below ~32 live rows the fixed per-iteration numpy dispatch
+#: cost exceeds the ~1µs/beat of the dict.
+TAIL_SETS = 32
+#: below this trace length the dict walk is trivially fast and the
+#: sort/pad setup of the lockstep path is not worth paying.
+MIN_LOCKSTEP_TRACE = 4096
+
+
+class _CompactLayout:
+    """Skew-compacted set-parallel layout shared by the numpy lockstep
+    walks (:func:`hit_rate_oracle`, :func:`filter_trace_rw`).
+
+    Sets are ordered by descending beat count, so at lockstep depth
+    ``j`` the live sets are exactly the prefix ``[:k_js[j]]`` — columns
+    are contiguous slices instead of boolean-masked full-width rows, and
+    total lockstep work is ``Σ_s min(count_s, d_cut)`` instead of
+    ``depth · sets``. Depth is cut at ``d_cut``, the beat count of the
+    (``TAIL_SETS``+1)-th hottest set: beyond it at most ``TAIL_SETS``
+    serial chains survive, and those residual subtraces (``tail_slices``)
+    go to the per-set dict walk, seeded from the lockstep arrays.
+    """
+
+    def __init__(self, lids: np.ndarray, sets: int):
+        n = lids.shape[0]
+        self.set_idx = lids % sets
+        self.tag = lids // sets
+        self.counts = np.bincount(self.set_idx, minlength=sets)
+        counts_d = np.sort(self.counts)[::-1]
+        self.d_cut = int(counts_d[TAIL_SETS]) if sets > TAIL_SETS else 0
+        self.vec_beats = int(np.minimum(self.counts, self.d_cut).sum())
+        self.n = n
+
+    @property
+    def worthwhile(self) -> bool:
+        """Enough lockstep-coverable work to beat the dict walk (the
+        dict tail runs at seq speed, so the combined path only loses
+        when setup overhead dominates — i.e. when almost everything is
+        tail anyway)."""
+        return (self.n >= MIN_LOCKSTEP_TRACE
+                and self.vec_beats >= self.n // 4)
+
+    def build(self):
+        """Materialize the padded ``(K, d_cut)`` layout (cost O(n +
+        K·d_cut); only call when :attr:`worthwhile`)."""
+        sets = self.counts.shape[0]
+        perm = np.argsort(self.set_idx, kind="stable")
+        starts = np.zeros(sets + 1, np.int64)
+        np.cumsum(self.counts, out=starts[1:])
+        sorder = np.argsort(-self.counts, kind="stable")
+        counts_d = self.counts[sorder]
+        self.K = K = int(np.searchsorted(-counts_d, 0, side="left"))
+        self.sorder = sorder
+        cap = np.minimum(counts_d[:K], self.d_cut)
+        mask = np.arange(self.d_cut)[None, :] < cap[:, None]
+        self.perm2 = np.concatenate(
+            [perm[starts[s]:starts[s] + c]
+             for s, c in zip(sorder[:K].tolist(), cap.tolist())]) \
+            if K else np.empty(0, np.int64)
+        self.mask = mask
+        # live-prefix length per lockstep depth: #{counts_d > j}
+        self.k_js = np.searchsorted(-counts_d[:K], -np.arange(self.d_cut),
+                                    side="left")
+        # residual serial chains: (row i, set s, global slice) triples
+        n_tail = int(np.searchsorted(-counts_d, -self.d_cut, side="left"))
+        self.tail_slices = [
+            (i, int(sorder[i]),
+             perm[starts[sorder[i]] + self.d_cut:
+                  starts[sorder[i]] + counts_d[i]])
+            for i in range(n_tail)]
+
+    def pad(self, vals: np.ndarray, dtype) -> np.ndarray:
+        out = np.zeros((self.K, self.d_cut), dtype)
+        out[self.mask] = vals[self.perm2]
+        return out
+
+
 def filter_trace_rw_seq(
     config: CacheConfig, line_ids: np.ndarray, rw: np.ndarray | None = None,
 ) -> FilterResult:
@@ -415,11 +493,14 @@ def filter_trace_rw(
     full-line write needs no fill read); evicting a dirty way inserts a
     WRITE of the victim line just before the evicting miss.
 
-    Vectorized exactly like :func:`hit_rate_oracle` — all sets advance in
-    lockstep over padded per-set subtraces with ``(sets, ways)``
-    tag/age/dirty arrays; global arrival indices keep LRU victims
-    identical to the dict walk. Skewed or tiny traces dispatch to the
-    sequential oracle (same skew heuristic as the hit-rate oracle).
+    Vectorized exactly like :func:`hit_rate_oracle` — the skew-compacted
+    lockstep walk (:class:`_CompactLayout`): sets advance ordered by
+    descending beat count so each depth step touches only the contiguous
+    live prefix, with ``(K, ways)`` tag/age/dirty arrays; global arrival
+    indices keep LRU victims identical to the dict walk, and the few
+    residual serial hot-set chains finish in the dict walk seeded from
+    the lockstep state. Tiny or chain-dominated traces dispatch to the
+    sequential oracle.
     """
     if engine not in ("auto", "parallel", "sequential"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -433,52 +514,75 @@ def filter_trace_rw(
         else np.asarray(rw, dtype=np.int32).ravel()
     if engine == "sequential":
         return filter_trace_rw_seq(config, lids, rw_arr)
-    set_idx = lids % sets
-    tag = lids // sets
-    perm = np.argsort(set_idx, kind="stable")
-    counts = np.bincount(set_idx, minlength=sets)
-    depth = int(counts.max())
-    if engine == "auto" and n < 128 * depth:   # skewed/tiny: dict walk wins
+    lay = _CompactLayout(lids, sets)
+    if engine == "auto" and not lay.worthwhile:   # skewed/tiny: dict wins
         return filter_trace_rw_seq(config, lids, rw_arr)
-    mask = np.arange(depth)[None, :] < counts[:, None]
-    tag_pad = np.zeros((sets, depth), np.int64)
-    tag_pad[mask] = tag[perm]
-    idx_pad = np.zeros((sets, depth), np.int64)
-    idx_pad[mask] = perm
-    w_pad = np.zeros((sets, depth), bool)
-    w_pad[mask] = rw_arr[perm] == 1
+    lay.build()
+    K = lay.K
+    tag_pad = lay.pad(lay.tag, np.int64)
+    idx_pad = lay.pad(np.arange(n, dtype=np.int64), np.int64)
+    w_pad = lay.pad(rw_arr == 1, bool)
+    set_of_row = lay.sorder[:K].astype(np.int64)
 
-    tags_arr = np.zeros((sets, ways), np.int64)
-    valid = np.zeros((sets, ways), bool)
-    age = np.full((sets, ways), -1, np.int64)
-    dirty = np.zeros((sets, ways), bool)
+    tags_arr = np.zeros((K, ways), np.int64)
+    valid = np.zeros((K, ways), bool)
+    age = np.full((K, ways), -1, np.int64)
+    dirty = np.zeros((K, ways), bool)
     res = _empty_filter_result(n)
     wb_pos_parts: list[np.ndarray] = []
     wb_line_parts: list[np.ndarray] = []
-    rows = np.arange(sets)
-    for j in range(depth):
-        live = mask[:, j]
-        t = tag_pad[:, j]
-        match = valid & (tags_arr == t[:, None])
+    rows = np.arange(K)
+    for j in range(lay.d_cut):
+        k = int(lay.k_js[j])          # live prefix: sets with count > j
+        t = tag_pad[:k, j]
+        match = valid[:k] & (tags_arr[:k] == t[:, None])
         hit = match.any(axis=1)
-        way = np.where(hit, match.argmax(axis=1), age.argmin(axis=1))
-        evict = live & ~hit & valid[rows, way] & dirty[rows, way]
+        way = np.where(hit, match.argmax(axis=1), age[:k].argmin(axis=1))
+        r = rows[:k]
+        evict = ~hit & valid[r, way] & dirty[r, way]
         if evict.any():
             es = np.flatnonzero(evict)
             wb_pos_parts.append(idx_pad[es, j])
-            wb_line_parts.append(tags_arr[es, way[es]] * sets + es)
-        r, wsel = rows[live], way[live]
-        gi = idx_pad[live, j]
-        hl = hit[live]
-        wl = w_pad[live, j]
-        old_dirty = dirty[r, wsel]
-        tags_arr[r, wsel] = t[live]
-        valid[r, wsel] = True
-        age[r, wsel] = gi
-        dirty[r, wsel] = np.where(hl, np.where(wl, wb, old_dirty),
-                                  wl & wb)
-        res.hits[gi] = hl
-        res.keep[gi] = ~hl | (wl & (not wb))
+            wb_line_parts.append(tags_arr[es, way[es]] * sets
+                                 + set_of_row[es])
+        gi = idx_pad[:k, j]
+        wl = w_pad[:k, j]
+        old_dirty = dirty[r, way]
+        tags_arr[r, way] = t
+        valid[r, way] = True
+        age[r, way] = gi
+        dirty[r, way] = np.where(hit, np.where(wl, wb, old_dirty),
+                                 wl & wb)
+        res.hits[gi] = hit
+        res.keep[gi] = ~hit | (wl & (not wb))
+    tag_l = lay.tag
+    wb_pos_tail: list[int] = []
+    wb_line_tail: list[int] = []
+    for i, s, sl in lay.tail_slices:
+        e = {int(tags_arr[i, w]): [int(age[i, w]), bool(dirty[i, w])]
+             for w in range(ways) if valid[i, w]}
+        for g, t, is_w in zip(sl.tolist(), tag_l[sl].tolist(),
+                              (rw_arr[sl] == 1).tolist()):
+            if t in e:
+                res.hits[g] = True
+                rec = e[t]
+                rec[0] = g
+                if is_w:
+                    rec[1] = wb
+                    res.keep[g] = not wb
+                else:
+                    res.keep[g] = False
+            else:
+                if len(e) >= ways:
+                    vt = min(e, key=lambda kk: e[kk][0])
+                    if e[vt][1]:
+                        wb_pos_tail.append(g)
+                        wb_line_tail.append(vt * sets + s)
+                    del e[vt]
+                e[t] = [g, is_w and wb]
+    if wb_pos_tail:
+        wb_pos_parts.append(np.asarray(wb_pos_tail, np.int64))
+        wb_line_parts.append(np.asarray(wb_line_tail, np.int64))
     if wb_pos_parts:
         pos = np.concatenate(wb_pos_parts)
         line = np.concatenate(wb_line_parts)
@@ -521,11 +625,15 @@ def hit_rate_oracle(
     python iterations instead of N. Ages are global arrival indices
     (unique), so LRU victims are identical to the sequential dict walk.
 
-    The lockstep walk costs ``max_per_set`` iterations of ``(sets, ways)``
-    array work, so a heavily set-skewed trace (hot set ≫ average) gains
-    nothing over the dict walk — when average parallelism
-    (``n / max_per_set``) is small the identical sequential oracle is
-    used instead.
+    The lockstep walk is *skew-compacted* (:class:`_CompactLayout`):
+    sets advance ordered by descending beat count so each depth step
+    touches only the contiguous prefix of still-live sets, and once at
+    most ``TAIL_SETS`` serial hot-set chains remain their residual beats
+    fall through to the dict walk seeded from the lockstep state — total
+    cost is O(n) array work plus dict-speed tails, so the parallel path
+    never loses to the sequential oracle beyond setup noise. Traces
+    where almost everything is one serial chain (or tiny ones) dispatch
+    straight to the identical sequential oracle.
     """
     sets, ways = config.num_sets, config.associativity
     lids = np.asarray(line_ids, dtype=np.int64).ravel()
@@ -533,34 +641,38 @@ def hit_rate_oracle(
     hits = np.zeros(n, dtype=bool)
     if n == 0:
         return hits, 0.0
-    set_idx = lids % sets
-    tag = lids // sets
-    perm = np.argsort(set_idx, kind="stable")
-    counts = np.bincount(set_idx, minlength=sets)
-    depth = int(counts.max())
-    if n < 128 * depth:                # skewed / tiny: dict walk is faster
+    lay = _CompactLayout(lids, sets)
+    if not lay.worthwhile:             # skewed / tiny: dict walk is faster
         return hit_rate_oracle_seq(config, lids)
-    # Padded (sets, depth) per-set subtraces; row-major boolean fill of the
-    # grouped order lands request k of set s at [s, k].
-    mask = np.arange(depth)[None, :] < counts[:, None]
-    tag_pad = np.zeros((sets, depth), np.int64)
-    tag_pad[mask] = tag[perm]
-    idx_pad = np.zeros((sets, depth), np.int64)
-    idx_pad[mask] = perm
+    lay.build()
+    K = lay.K
+    tag_pad = lay.pad(lay.tag, np.int64)
+    idx_pad = lay.pad(np.arange(n, dtype=np.int64), np.int64)
 
-    tags_arr = np.zeros((sets, ways), np.int64)
-    valid = np.zeros((sets, ways), bool)
-    age = np.full((sets, ways), -1, np.int64)   # empty ways always win LRU
-    rows = np.arange(sets)
-    for j in range(depth):
-        live = mask[:, j]
-        t = tag_pad[:, j]
-        match = valid & (tags_arr == t[:, None])
+    tags_arr = np.zeros((K, ways), np.int64)
+    valid = np.zeros((K, ways), bool)
+    age = np.full((K, ways), -1, np.int64)   # empty ways always win LRU
+    rows = np.arange(K)
+    for j in range(lay.d_cut):
+        k = int(lay.k_js[j])          # live prefix: sets with count > j
+        t = tag_pad[:k, j]
+        match = valid[:k] & (tags_arr[:k] == t[:, None])
         hit = match.any(axis=1)
-        way = np.where(hit, match.argmax(axis=1), age.argmin(axis=1))
-        r, w = rows[live], way[live]
-        tags_arr[r, w] = t[live]
-        valid[r, w] = True
-        age[r, w] = idx_pad[live, j]
-        hits[idx_pad[live, j]] = hit[live]
+        way = np.where(hit, match.argmax(axis=1), age[:k].argmin(axis=1))
+        r = rows[:k]
+        gi = idx_pad[:k, j]
+        tags_arr[r, way] = t
+        valid[r, way] = True
+        age[r, way] = gi
+        hits[gi] = hit
+    tag_l = lay.tag
+    for i, _s, sl in lay.tail_slices:
+        entry = {int(tags_arr[i, w]): int(age[i, w])
+                 for w in range(ways) if valid[i, w]}
+        for g, t in zip(sl.tolist(), tag_l[sl].tolist()):
+            if t in entry:
+                hits[g] = True
+            elif len(entry) >= ways:
+                del entry[min(entry, key=entry.get)]
+            entry[t] = g
     return hits, float(hits.mean())

@@ -27,7 +27,11 @@ Two passes:
    are processed in ``chunk``-beat *rounds*, each round advancing only
    the lanes that still have work: total padded work is
    ``Σ_s ceil(count_s / chunk) · chunk ≤ N + num_sets · chunk`` no matter
-   how skewed the trace. LRU ages stay bit-identical by stamping each
+   how skewed the trace. Once at most ``FINISH_LANES`` lanes survive the
+   rounds switch to a geometric staircase (depths from ``TAIL_CHUNKS``):
+   one shallow round retires the short lanes, then the few serial
+   hot-set chains run deep narrow scans — all beats stay in-kernel, with
+   no per-beat python tail. LRU ages stay bit-identical by stamping each
    beat with its *global* arrival position (``clock0 + i + 1``).
 
 2. **Data reconstruction**: served lines, the final Data RAM and the
@@ -146,49 +150,16 @@ def _tag_round(tags, valid, age, dirty, clock0, lane_ids,
             age.at[sc].set(ag2), dirty.at[sc].set(dt2)), ys
 
 
-#: hand the residual trace tail to the python finisher once at most this
-#: many lanes still have work ...
+#: switch the chunked rounds to the geometric tail staircase once at most
+#: this many lanes still have work: short lanes die in one shallow round,
+#: then the surviving hot-set chains run deep compacted scans (the
+#: retired python finisher walked these beats on host copies instead —
+#: a compacted ``_tag_round`` does a serial chain at ~1µs/beat with no
+#: full-state host round trip).
 FINISH_LANES = 64
-#: ... and at most this many beats remain. A narrow lax.scan pays ~10µs
-#: of fixed per-step cost regardless of width; a python walk over host
-#: state does a skewed hot-set's serial chain at ~1µs/beat.
-FINISH_BEATS = 100_000
-
-
-def _finish_python(state_arrays, lids_tail, rw_tail, stamps_tail,
-                   dests_tail, ways: int, write_back: bool, outs):
-    """Per-beat python walk for the residual (hot-set) subtraces.
-
-    ``state_arrays`` are host copies of (tags, valid, age, dirty);
-    mutated in place. Exactly the ``access_rw`` tag rules, including
-    first-match / first-min tie-breaking.
-    """
-    tg_h, vd_h, ag_h, dt_h, num_sets = state_arrays
-    hit_a, way_a, evict_a, victag_a = outs
-    for lid, is_w, stamp, dst in zip(lids_tail.tolist(), rw_tail.tolist(),
-                                     stamps_tail.tolist(),
-                                     dests_tail.tolist()):
-        s = lid % num_sets
-        tag = lid // num_sets
-        t_row, v_row = tg_h[s], vd_h[s]
-        a_row, d_row = ag_h[s], dt_h[s]
-        way = -1
-        for w in range(ways):
-            if v_row[w] and t_row[w] == tag:
-                way = w
-                break
-        hit = way >= 0
-        if not hit:
-            way = min(range(ways), key=a_row.__getitem__)
-        victag_a[dst] = t_row[way]
-        evict_a[dst] = (not hit) and v_row[way] and d_row[way]
-        hit_a[dst] = hit
-        way_a[dst] = way
-        keep = hit and d_row[way] and not is_w
-        t_row[way] = tag
-        v_row[way] = True
-        a_row[way] = stamp
-        d_row[way] = (is_w or keep) if write_back else keep
+#: tail round depths — a small fixed menu so the (chunk, lanes) shape
+#: universe (and the jit compile cache) stays bounded.
+TAIL_CHUNKS = (256, 1024, 4096, 16384, 65536)
 
 
 def _run_tag_pipeline(state, lids: np.ndarray, rw: np.ndarray | None, *,
@@ -215,24 +186,34 @@ def _run_tag_pipeline(state, lids: np.ndarray, rw: np.ndarray | None, *,
     way_a = np.zeros(n, np.int32)
     evict_a = np.zeros(n, bool)
     victag_a = np.zeros(n, np.int64)
-    offs = np.arange(chunk)
     rounds = []          # (ys device arrays, live-lane count, host idx/mask)
-    r = 0
-    while r * chunk < max_count:
-        live = np.flatnonzero(counts > r * chunk).astype(np.int32)
-        if (r > 0 and live.shape[0] <= FINISH_LANES
-                and int((counts - r * chunk).clip(0).sum())
-                <= FINISH_BEATS):
-            break                       # skew tail → python finisher
+    done = 0
+    while done < max_count:
+        live = np.flatnonzero(counts > done).astype(np.int32)
+        if live.shape[0] <= FINISH_LANES:
+            # Geometric tail staircase: pick the smallest menu depth that
+            # retires the shortest surviving lane — short lanes die in one
+            # shallow round, then the hot-set chains run deep compacted
+            # scans (~1µs/step at one lane) with no per-beat python.
+            rem = counts[live] - done
+            want = min(int(rem.max()), max(int(rem.min()), chunk))
+            chunk_r = TAIL_CHUNKS[-1]
+            for c in TAIL_CHUNKS:
+                if c >= want:
+                    chunk_r = c
+                    break
+        else:
+            chunk_r = chunk
+        offs = np.arange(chunk_r)
         k_pad = _next_pow2(max(1, live.shape[0]))
         lane_ids = np.full(k_pad, num_sets, np.int32)
         lane_ids[:live.shape[0]] = live
         # (chunk, k) layouts built directly — contiguous scan rows, no
         # transpose; dead slots hold garbage that live_x masks off.
-        idx = np.clip(starts[live][None, :] + (r * chunk + offs)[:, None],
+        idx = np.clip(starts[live][None, :] + (done + offs)[:, None],
                       0, n - 1)
-        mask = np.zeros((chunk, k_pad), bool)
-        mask[:, :live.shape[0]] = (r * chunk + offs)[:, None] \
+        mask = np.zeros((chunk_r, k_pad), bool)
+        mask[:, :live.shape[0]] = (done + offs)[:, None] \
             < counts[live][None, :]
         pad = ((0, 0), (0, k_pad - live.shape[0]))
         tag_x = np.pad(tag_s[idx], pad)
@@ -244,8 +225,7 @@ def _run_tag_pipeline(state, lids: np.ndarray, rw: np.ndarray | None, *,
             jnp.asarray(tag_x), jnp.asarray(mask), jnp.asarray(w_x),
             jnp.asarray(stamp_x), write_back)
         rounds.append((ys, live.shape[0], idx, mask))
-        r += 1
-    tail_from = r * chunk
+        done += chunk_r
     # Unsort once at the end (the transfers drain the async dispatch
     # queue; sorted position -> arrival slot via the set-sort perm).
     for ys, k, idx, mask in rounds:
@@ -255,34 +235,6 @@ def _run_tag_pipeline(state, lids: np.ndarray, rw: np.ndarray | None, *,
         way_a[dst] = np.asarray(ys[1])[:, :k][m]
         evict_a[dst] = np.asarray(ys[2])[:, :k][m]
         victag_a[dst] = np.asarray(ys[3])[:, :k][m]
-    if tail_from < max_count:
-        # Residual hot-set chains: per-beat python walk on host copies of
-        # the few live sets' control state, then one scatter back.
-        live = np.flatnonzero(counts > tail_from)
-        spans = [(int(starts[s] + tail_from), int(starts[s] + counts[s]))
-                 for s in live]
-        sel = np.concatenate([np.arange(a, b) for a, b in spans])
-        clock0 = int(np.asarray(state.clock))
-        # int32-exact stamps (matching the in-kernel int32 add) before the
-        # python walk, so age comparisons and stored values are identical.
-        stamps_tail = ((stamp_s[sel].astype(np.int64) + clock0)
-                       & 0xFFFFFFFF).astype(np.uint32).astype(np.int32)
-        tg_h = np.asarray(tags).tolist()
-        vd_h = np.asarray(valid).tolist()
-        ag_h = np.asarray(age).tolist()
-        dt_h = np.asarray(dirty).tolist()
-        lids_sorted = lids[perm]
-        _finish_python((tg_h, vd_h, ag_h, dt_h, num_sets),
-                       lids_sorted[sel], rw_s[sel], stamps_tail, perm[sel],
-                       ways, write_back,
-                       (hit_a, way_a, evict_a, victag_a))
-        live_j = jnp.asarray(live)
-        tags = tags.at[live_j].set(
-            jnp.asarray(np.asarray(tg_h, np.int32)[live]))
-        valid = valid.at[live_j].set(jnp.asarray(np.asarray(vd_h)[live]))
-        age = age.at[live_j].set(
-            jnp.asarray(np.asarray(ag_h, np.int64).astype(np.int32)[live]))
-        dirty = dirty.at[live_j].set(jnp.asarray(np.asarray(dt_h)[live]))
     set_idx = (lids % num_sets).astype(np.int64)
     return (tags, valid, age, dirty), hit_a, way_a, evict_a, victag_a, \
         set_idx
@@ -545,12 +497,6 @@ def auto_parallel_ok(state, line_ids, *, rw=None, write_lines=None,
     if n < MIN_PARALLEL_TRACE:
         return False
     num_sets = int(state.tags.shape[0])
-    # Degenerate skew: (almost) everything in one set is one serial
-    # chain — narrow scan rounds would be slower than the seed scan.
-    max_count = int(np.bincount(np.asarray(lids, np.int64) % num_sets,
-                                minlength=num_sets).max())
-    if max_count > max(FINISH_BEATS, n // 2):
-        return False
     if not rw_path:
         if table is not None and not _is_concrete(table):
             return False
@@ -593,23 +539,24 @@ def simulate_dram_sched_fast(addrs, timings, sched, rw=None, *, trace=None):
     the windowed baseline simulator uses: **open-row state changes only
     when a miss is serviced**. Between miss services, FR-FCFS issues the
     pending row-hits oldest-first — which is exactly the frontier scan
-    order — so the walk alternates between
+    order — so the walk decomposes into scan runs (hits issue in arrival
+    order against frozen bank state, misses defer) punctuated by miss
+    services and their drains (deferred requests the newly opened row
+    converts into hits).
 
-    * a **vectorized scan run**: classify a chunk of the frontier
-      against current bank state, issue every hit in one array op and
-      defer the misses, with the run truncated by whichever binds
-      first — the window filling with misses (the ``room``-th miss),
-      the starvation budget of the oldest pending miss (``frfcfs_cap``),
-      or the service time crossing the next refresh boundary; and
-    * a **scalar event**: issue the oldest deferred miss (window full /
-      trace exhausted / starvation-forced), drain the deferred requests
-      its newly opened row converts into hits, or refresh (stall
-      ``t_rfc``, precharge every bank).
+    Dispatch:
 
-    Row-hit runs stream at array speed; python touches one request per
-    serviced miss, forced pick, or refresh.
+    * ``fifo``/``frfcfs`` run :func:`_sched_fast_nocap` — a segmented
+      scan over per-(bank,row) drain buckets: every drain is an O(1)
+      bucket pop instead of an O(window) pending scan, the miss-heavy
+      regime runs a branch-light tight loop with no per-event python
+      round trips, and hit-heavy phases escalate to chunked array scans
+      that issue whole row-hit runs in single vector ops.
+    * ``frfcfs_cap`` keeps the starvation-budget event walk
+      (:func:`_sched_fast_cap`): forced picks interleave state changes
+      mid-drain, which couples the drain order to the bypass counters.
 
-    ``trace`` keeps this hot path untouched: the timing run completes
+    ``trace`` keeps both hot paths untouched: the timing run completes
     first, then :func:`repro.core.telemetry.replay_sched_events`
     reconstructs the oracle's event stream from ``service_order``.
     """
@@ -622,6 +569,256 @@ def simulate_dram_sched_fast(addrs, timings, sched, rw=None, *, trace=None):
     rows = timings.row_of(addrs)
     banks = timings.bank_of(addrs)
     rw_arr = None if rw is None else np.asarray(rw, np.int32).ravel()
+    if sched.policy != "frfcfs_cap":
+        key_span = int(rows.max()) + 2 if n else 2
+        if key_span < (1 << 61) // max(int(timings.num_banks), 1):
+            res = _sched_fast_nocap(n, rows, banks, timings, sched, rw_arr)
+            if trace is not None:
+                from repro.core import telemetry
+                telemetry.replay_sched_events(addrs, timings, sched,
+                                              rw_arr, res, trace)
+            return res
+    return _sched_fast_cap(addrs, n, rows, banks, timings, sched, rw_arr,
+                           trace=trace)
+
+
+def _sched_fast_nocap(n, rows, banks, timings, sched, rw_arr):
+    """Bucketed segmented scan for ``fifo``/``frfcfs`` (no starvation
+    cap) — bit-identical to the oracle's window walk.
+
+    Without a cap the pick rule is static: oldest row-ready hit, else
+    oldest miss. Three structural facts make the walk cheap:
+
+    * deferred requests drain **only** when a miss opens exactly their
+      (bank, row) — so the pending window is kept as per-(bank, row)
+      *buckets* and a drain is one dict pop over exactly the converted
+      requests (the oracle's O(window) rescan per event disappears);
+    * the oldest pending miss is popped through an append-only arrival
+      list with a lazy-deletion head (drained entries are flagged and
+      skipped), so window-full events are O(1);
+    * bank state changes only at miss services, so while the frontier
+      streams row hits the state is frozen and whole runs classify in
+      one vector compare against packed (bank, row) keys — the tight
+      loop escalates to chunked array scans after a long hit streak and
+      falls back when the stream turns miss-heavy.
+
+    Refresh is absorbed exactly as the oracle does: checked before every
+    pick (scan hit, miss service, and each drained hit), closing every
+    bank and re-anchoring the next boundary; a refresh that lands mid
+    drain re-queues the unserved bucket tail.
+    """
+    from repro.core.timing import _sched_result
+
+    w = sched.effective_window
+    t_refi, t_rfc = sched.t_refi, sched.t_rfc
+    t_wtr, t_rtw = timings.t_wtr, timings.t_rtw
+    cost_hit = timings.t_cl + timings.t_burst
+    cost_first = timings.t_rcd + timings.t_cl + timings.t_burst
+    cost_conf = (timings.t_rp + timings.t_rcd + timings.t_cl
+                 + timings.t_burst)
+    nb = timings.num_banks
+
+    key_span = int(rows.max()) + 2
+    keys = banks * key_span + rows          # packed (bank, row) identity
+    keys_l = keys.tolist()
+    rw_l = None if rw_arr is None else rw_arr.tolist()
+    cur = [-1] * nb                 # open packed key per bank, -1 closed
+    buckets: dict[int, list[int]] = {}      # packed key -> deferred idxs
+    order: list[int] = []           # deferred arrival order (append-only)
+    head = 0                        # lazy-deletion read head into order
+    drained = bytearray(n)          # 1 = served by a drain, skip on pop
+    ndef = 0                        # live deferred count
+    out_l: list[int] = []
+    f = 0
+    cycle = 0
+    next_ref = t_refi if t_refi else float("inf")
+    n_hit = n_conflict = n_first = n_ref = turn = 0
+    last_dir = -1
+    streak = 0                      # consecutive tight-loop scan hits
+    STREAK = 192                    # escalate to array scans past this
+    grow = max(64, 4 * w)
+
+    while True:
+        if f >= n and ndef == 0:
+            break
+        # refresh precedes the next pick (one always follows: not done)
+        while cycle >= next_ref:
+            cycle += t_rfc
+            n_ref += 1
+            cur = [-1] * nb
+            next_ref += t_refi
+        # ---- scan phase: serve frontier hits, defer misses ----------
+        while f < n and ndef < w:
+            if cycle >= next_ref:
+                cycle += t_rfc
+                n_ref += 1
+                cur = [-1] * nb
+                next_ref += t_refi
+                streak = 0
+                continue
+            if streak >= STREAK:
+                # -- array burst: bank state is frozen while the
+                # frontier streams hits, so whole runs classify in one
+                # vector compare; the run is truncated by the room-th
+                # miss or the next refresh boundary, exactly like the
+                # tight loop it replaces
+                kb = np.asarray(cur, np.int64)
+                while f < n and ndef < w:
+                    room = w - ndef
+                    chunk = min(max(32, 4 * room, grow), n - f)
+                    sl = slice(f, f + chunk)
+                    hm = kb[banks[sl]] == keys[sl]
+                    miss_rel = np.flatnonzero(~hm)
+                    if miss_rel.size >= room:
+                        take = int(miss_rel[room - 1]) + 1
+                        miss_rel = miss_rel[:room]
+                    else:
+                        take = chunk
+                    hit_rel = np.flatnonzero(hm[:take])
+                    tcosts = None
+                    if rw_arr is not None and hit_rel.size:
+                        dirs = rw_arr[f + hit_rel]
+                        prev = np.concatenate(([last_dir], dirs[:-1]))
+                        tcosts = np.where(
+                            (prev == 1) & (dirs == 0), t_wtr,
+                            np.where((prev == 0) & (dirs == 1),
+                                     t_rtw, 0)).astype(np.int64)
+                    if t_refi and hit_rel.size:
+                        costs = (np.full(hit_rel.size, cost_hit, np.int64)
+                                 if tcosts is None else cost_hit + tcosts)
+                        pre = cycle + np.concatenate(
+                            ([0], np.cumsum(costs[:-1])))
+                        cross = np.flatnonzero(pre >= next_ref)
+                        if cross.size:           # cross[0] >= 1: see top
+                            kcut = int(cross[0])
+                            take = int(hit_rel[kcut])
+                            hit_rel = hit_rel[:kcut]
+                            miss_rel = miss_rel[miss_rel < take]
+                            if tcosts is not None:
+                                tcosts = tcosts[:kcut]
+                    k = hit_rel.size
+                    if k:
+                        n_hit += k
+                        if tcosts is None:
+                            cycle += k * cost_hit
+                        else:
+                            tsum = int(tcosts.sum())
+                            turn += tsum
+                            cycle += k * cost_hit + tsum
+                            last_dir = int(rw_arr[f + hit_rel[-1]])
+                        out_l.extend((f + hit_rel).tolist())
+                    if miss_rel.size:
+                        for m in (f + miss_rel).tolist():
+                            kk = keys_l[m]
+                            lst = buckets.get(kk)
+                            if lst is None:
+                                buckets[kk] = [m]
+                            else:
+                                lst.append(m)
+                            order.append(m)
+                        ndef += miss_rel.size
+                    f += take
+                    if take < chunk or cycle >= next_ref:
+                        break
+                    grow = min(chunk * 2, 1 << 20)
+                streak = 0
+                grow = max(64, 4 * w)
+                continue
+            k = keys_l[f]
+            if cur[k // key_span] == k:
+                c = cost_hit
+                if rw_l is not None:
+                    d = rw_l[f]
+                    if d != last_dir:
+                        if last_dir == 1:
+                            c += t_wtr
+                            turn += t_wtr
+                        elif last_dir == 0:
+                            c += t_rtw
+                            turn += t_rtw
+                        last_dir = d
+                n_hit += 1
+                cycle += c
+                out_l.append(f)
+                streak += 1
+            else:
+                lst = buckets.get(k)
+                if lst is None:
+                    buckets[k] = [f]
+                else:
+                    lst.append(f)
+                order.append(f)
+                ndef += 1
+                streak = 0
+            f += 1
+        if ndef == 0:
+            continue
+        if cycle >= next_ref:
+            continue
+        # ---- event: pop the oldest deferred miss --------------------
+        while drained[order[head]]:
+            head += 1
+        d = order[head]
+        head += 1
+        ndef -= 1
+        k = keys_l[d]
+        if cur[k // key_span] == -1:
+            n_first += 1
+            c = cost_first
+        else:
+            n_conflict += 1
+            c = cost_conf
+        cur[k // key_span] = k
+        if rw_l is not None:
+            dd = rw_l[d]
+            if dd != last_dir:
+                if last_dir == 1:
+                    c += t_wtr
+                    turn += t_wtr
+                elif last_dir == 0:
+                    c += t_rtw
+                    turn += t_rtw
+                last_dir = dd
+        cycle += c
+        out_l.append(d)
+        streak = 0
+        # ---- drain: the bucket holds exactly the converted hits -----
+        lst = buckets.pop(k)        # lst[0] is d (oldest overall)
+        for i in range(1, len(lst)):
+            if cycle >= next_ref:
+                buckets[k] = lst[i:]        # refresh mid-drain: re-queue
+                break
+            x = lst[i]
+            c = cost_hit
+            if rw_l is not None:
+                dd = rw_l[x]
+                if dd != last_dir:
+                    if last_dir == 1:
+                        c += t_wtr
+                        turn += t_wtr
+                    elif last_dir == 0:
+                        c += t_rtw
+                        turn += t_rtw
+                    last_dir = dd
+            n_hit += 1
+            cycle += c
+            out_l.append(x)
+            drained[x] = 1
+            ndef -= 1
+    return _sched_result(n_first, n_hit, n_conflict, n, turn, n_ref,
+                         t_rfc, timings, np.asarray(out_l, np.int64))
+
+
+def _sched_fast_cap(addrs, n, rows, banks, timings, sched, rw_arr, *,
+                    trace=None):
+    """Starvation-budget event walk (``frfcfs_cap``, and the fallback
+    for degenerate packed-key ranges): a vectorized frontier scan with
+    one python event per serviced miss or forced pick. Forced picks
+    interleave state changes mid-drain, which couples the drain order
+    to the bypass counters — the reason this path keeps the explicit
+    pending list the bucketed no-cap walk retires."""
+    from repro.core.timing import _sched_result
+
     w = sched.effective_window
     use_cap = sched.policy == "frfcfs_cap"
     cap = sched.starvation_cap
@@ -938,8 +1135,16 @@ def simulate_arrivals_fast(addrs, timings, sched, rw=None, *,
         return ServingSimResult(total_fpga_cycles=0.0, row_hits=0,
                                 row_conflicts=0, first_accesses=0)
     if nports == 1:
-        res = _arrivals_fast_single(addrs, n, timings, sched, rw_arr, arr,
-                                    ServingSimResult)
+        if sched.policy != "frfcfs_cap":
+            rows_v = timings.row_of(addrs)
+            key_span = int(rows_v.max()) + 2 if n else 2
+        if (sched.policy != "frfcfs_cap"
+                and key_span < (1 << 61) // max(int(timings.num_banks), 1)):
+            res = _arrivals_fast_single_nocap(addrs, n, timings, sched,
+                                              rw_arr, arr, ServingSimResult)
+        else:
+            res = _arrivals_fast_single(addrs, n, timings, sched, rw_arr,
+                                        arr, ServingSimResult)
     else:
         res = _arrivals_fast_multi(addrs, n, timings, sched, rw_arr, arr,
                                    ports, nports, arb_policy, weights,
@@ -950,6 +1155,262 @@ def simulate_arrivals_fast(addrs, timings, sched, rw=None, *,
             addrs, timings, sched, rw_arr, arrival_fpga=arrival_fpga,
             pe_id=pe_id, num_ports=num_ports, result=res, trace=trace)
     return res
+
+
+def _arrivals_fast_single_nocap(addrs, n, timings, sched, rw_arr, arr,
+                                result_cls):
+    """Arrival-gated bucketed segmented scan (single admission queue,
+    ``fifo``/``frfcfs``) — the open-loop sibling of
+    :func:`_sched_fast_nocap`: per-(bank, row) drain buckets and a
+    lazy-deletion pending list replace the O(window) pending rescan per
+    event, with the scan additionally truncated by the arrival gate (a
+    request is admitted only once the clock reaches its stamp) and an
+    idle-gap advance (refreshes completing inside the gap overlap with
+    idleness; one in progress at the target delays the next issue to
+    its end — the oracle's absorb rule). The clock is ``anchor + off``
+    (float anchor set only at idle jumps, exact integer offset), so
+    batched cost sums land on bit-identical timestamps."""
+    rows = timings.row_of(addrs)
+    banks = timings.bank_of(addrs)
+    w = sched.effective_window
+    t_refi, t_rfc = sched.t_refi, sched.t_rfc
+    t_wtr, t_rtw = timings.t_wtr, timings.t_rtw
+    cost_hit = timings.t_cl + timings.t_burst
+    cost_first = timings.t_rcd + timings.t_cl + timings.t_burst
+    cost_conf = (timings.t_rp + timings.t_rcd + timings.t_cl
+                 + timings.t_burst)
+    nb = timings.num_banks
+
+    key_span = int(rows.max()) + 2
+    keys = banks * key_span + rows
+    keys_l = keys.tolist()
+    rw_l = None if rw_arr is None else rw_arr.tolist()
+    arr_l = arr.tolist()
+    cur = [-1] * nb
+    buckets: dict[int, list[int]] = {}
+    order: list[int] = []
+    head = 0
+    drained = bytearray(n)
+    ndef = 0
+    out = np.empty(n, np.int64)
+    out_n = 0
+    completion = np.zeros(n, np.float64)
+    service = np.zeros(n, np.int64)
+    f = 0
+    anchor = 0                  # float once the channel has idled
+    off = 0                     # exact integer clocks since anchor
+    next_ref = t_refi if t_refi else float("inf")
+    n_hit = n_conflict = n_first = n_ref = turn = 0
+    last_dir = -1
+    streak = 0
+    STREAK = 192
+    grow = max(64, 4 * w)
+    idle = 0.0
+
+    while True:
+        if f >= n and ndef == 0:
+            break
+        if ndef == 0 and arr_l[f] > anchor + off:
+            # idle-gap advance with the oracle's refresh-absorb rule
+            target = arr_l[f]
+            if t_refi:
+                while next_ref <= target:
+                    n_ref += 1
+                    cur = [-1] * nb
+                    end = next_ref + t_rfc
+                    next_ref += t_refi
+                    if end > target:
+                        target = end
+            idle += target - (anchor + off)
+            anchor, off = target, 0
+            streak = 0
+        while anchor + off >= next_ref:     # refresh precedes the pick
+            off += t_rfc
+            n_ref += 1
+            cur = [-1] * nb
+            next_ref += t_refi
+        # ---- scan phase: serve arrived hits, defer arrived misses ---
+        while f < n and ndef < w and arr_l[f] <= anchor + off:
+            if anchor + off >= next_ref:
+                off += t_rfc
+                n_ref += 1
+                cur = [-1] * nb
+                next_ref += t_refi
+                streak = 0
+                continue
+            if streak >= STREAK:
+                # -- array burst: state frozen while hits stream; runs
+                # truncated by the arrival gate, the room-th miss, or
+                # the refresh boundary
+                kb = np.asarray(cur, np.int64)
+                while f < n and ndef < w and arr_l[f] <= anchor + off:
+                    room = w - ndef
+                    chunk = min(max(32, 4 * room, grow), n - f)
+                    sl = slice(f, f + chunk)
+                    hm = kb[banks[sl]] == keys[sl]
+                    hit_all = np.flatnonzero(hm)
+                    costs_full = np.zeros(chunk, np.int64)
+                    tc = None
+                    if rw_arr is not None and hit_all.size:
+                        dirs = rw_arr[f + hit_all]
+                        prev = np.concatenate(([last_dir], dirs[:-1]))
+                        tc = np.where(
+                            (prev == 1) & (dirs == 0), t_wtr,
+                            np.where((prev == 0) & (dirs == 1),
+                                     t_rtw, 0)).astype(np.int64)
+                        costs_full[hit_all] = cost_hit + tc
+                    else:
+                        costs_full[hit_all] = cost_hit
+                    ends_full = off + np.cumsum(costs_full)
+                    pre_full = ends_full - costs_full
+                    take = chunk
+                    late = np.flatnonzero(arr[sl] > anchor + pre_full)
+                    if late.size:
+                        take = int(late[0])
+                    miss_rel = np.flatnonzero(~hm[:take])
+                    if miss_rel.size >= room:
+                        t2 = int(miss_rel[room - 1]) + 1
+                        if t2 < take:
+                            take = t2
+                        miss_rel = miss_rel[:room]
+                    hit_rel = hit_all[hit_all < take]
+                    if t_refi and hit_rel.size:
+                        cross = np.flatnonzero(
+                            anchor + pre_full[hit_rel] >= next_ref)
+                        if cross.size:       # cross[0] >= 1: refresh ran
+                            kcut = int(cross[0])
+                            take = int(hit_rel[kcut])
+                            hit_rel = hit_rel[:kcut]
+                            miss_rel = miss_rel[miss_rel < take]
+                    k = hit_rel.size
+                    if k:
+                        n_hit += k
+                        if tc is not None:
+                            tsum = int(tc[:k].sum())  # hit_rel prefixes
+                            turn += tsum
+                            last_dir = int(rw_arr[f + hit_rel[-1]])
+                        completion[f + hit_rel] = anchor + ends_full[hit_rel]
+                        service[f + hit_rel] = costs_full[hit_rel]
+                        off = int(ends_full[hit_rel[-1]])
+                        out[out_n:out_n + k] = f + hit_rel
+                        out_n += k
+                    if miss_rel.size:
+                        for m in (f + miss_rel).tolist():
+                            kk = keys_l[m]
+                            lst = buckets.get(kk)
+                            if lst is None:
+                                buckets[kk] = [m]
+                            else:
+                                lst.append(m)
+                            order.append(m)
+                        ndef += miss_rel.size
+                    f += take
+                    if take < chunk or anchor + off >= next_ref:
+                        break
+                    grow = min(chunk * 2, 1 << 20)
+                streak = 0
+                grow = max(64, 4 * w)
+                continue
+            k = keys_l[f]
+            if cur[k // key_span] == k:
+                c = cost_hit
+                if rw_l is not None:
+                    d = rw_l[f]
+                    if d != last_dir:
+                        if last_dir == 1:
+                            c += t_wtr
+                            turn += t_wtr
+                        elif last_dir == 0:
+                            c += t_rtw
+                            turn += t_rtw
+                        last_dir = d
+                n_hit += 1
+                off += c
+                completion[f] = anchor + off
+                service[f] = c
+                out[out_n] = f
+                out_n += 1
+                streak += 1
+            else:
+                lst = buckets.get(k)
+                if lst is None:
+                    buckets[k] = [f]
+                else:
+                    lst.append(f)
+                order.append(f)
+                ndef += 1
+                streak = 0
+            f += 1
+        if ndef == 0:
+            continue
+        if anchor + off >= next_ref:
+            continue
+        # ---- event: pop the oldest admitted miss --------------------
+        while drained[order[head]]:
+            head += 1
+        d = order[head]
+        head += 1
+        ndef -= 1
+        k = keys_l[d]
+        if cur[k // key_span] == -1:
+            n_first += 1
+            c = cost_first
+        else:
+            n_conflict += 1
+            c = cost_conf
+        cur[k // key_span] = k
+        if rw_l is not None:
+            dd = rw_l[d]
+            if dd != last_dir:
+                if last_dir == 1:
+                    c += t_wtr
+                    turn += t_wtr
+                elif last_dir == 0:
+                    c += t_rtw
+                    turn += t_rtw
+                last_dir = dd
+        off += c
+        completion[d] = anchor + off
+        service[d] = c
+        out[out_n] = d
+        out_n += 1
+        streak = 0
+        lst = buckets.pop(k)
+        for i in range(1, len(lst)):
+            if anchor + off >= next_ref:
+                buckets[k] = lst[i:]
+                break
+            x = lst[i]
+            c = cost_hit
+            if rw_l is not None:
+                dd = rw_l[x]
+                if dd != last_dir:
+                    if last_dir == 1:
+                        c += t_wtr
+                        turn += t_wtr
+                    elif last_dir == 0:
+                        c += t_rtw
+                        turn += t_rtw
+                    last_dir = dd
+            n_hit += 1
+            off += c
+            completion[x] = anchor + off
+            service[x] = c
+            out[out_n] = x
+            out_n += 1
+            drained[x] = 1
+            ndef -= 1
+    return result_cls(
+        total_fpga_cycles=(anchor + off) * timings.clock_ratio,
+        row_hits=n_hit, row_conflicts=n_conflict, first_accesses=n_first,
+        n_refreshes=n_ref, refresh_dram_cycles=n_ref * t_rfc,
+        turnaround_dram_cycles=turn,
+        service_order=out,
+        completion_fpga_cycles=completion * timings.clock_ratio,
+        service_dram_cycles=service,
+        grant_order=np.arange(n, dtype=np.int64),
+        granted_port=np.zeros(n, np.int64),
+        idle_dram_cycles=idle)
 
 
 def _arrivals_fast_single(addrs, n, timings, sched, rw_arr, arr, result_cls):

@@ -3,9 +3,12 @@ the new channel/mapping search axes."""
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
-from repro.core.autotune import _score, tune
-from repro.core.config import MemoryControllerConfig
+from repro.core.autotune import _score, sweep_serving_loads, tune
+from repro.core.config import (CacheConfig, DRAMSchedConfig,
+                               MemoryControllerConfig, SchedulerConfig)
+from repro.core.controller import MemoryController
 from repro.core.timing import DDR4_2400
 
 
@@ -149,3 +152,139 @@ def test_tune_serving_constrained_selection():
                         reorder_windows=(16,), starvation_caps=(8,))
     assert res2.feasible
     assert res2.makespan_cycles == min(m for _, _, m in res2.table)
+
+
+# ---------------------------------------------------------------------------
+# Batched grid scorer == one-at-a-time oracle (ISSUE 9 tentpole c)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([(1.05, 1 << 14, 64), (1.3, 2048, 512),
+                        (1.2, 256, 4096)]),
+       st.sampled_from([((16, 64), (1, 4), (1024, 4096)),
+                        ((8,), (2,), (256, 16384))]),
+       st.sampled_from([((1,), ("row_interleave",)),
+                        ((1, 2, 4), ("row_interleave", "xor")),
+                        ((2,), ("block_interleave",))]),
+       st.sampled_from([(("fifo",), (1,)),
+                        (("fifo", "frfcfs"), (1, 8)),
+                        (("frfcfs", "frfcfs_cap"), (4, 32))]),
+       st.booleans(),
+       st.integers(0, 5))
+def test_property_batched_tune_matches_oracle(workload, cache_axes,
+                                              chan_axes, sched_axes,
+                                              enable_cache, seed):
+    """tune(engine='batched') must reproduce tune(engine='oracle') bit
+    for bit — every table entry, the argmin config, the modeled score
+    and the candidate count — across cache/channel/sched grids, skew
+    levels and cache-off runs."""
+    skew, n_rows, row_bytes = workload
+    batches, ways, lines = cache_axes
+    n_chans, mappings = chan_axes
+    spols, wins = sched_axes
+    rng = np.random.default_rng(seed)
+    rows = ((rng.zipf(skew, 1500) - 1) % n_rows).astype(np.int64)
+    grids = dict(batch_sizes=batches, associativities=ways,
+                 num_lines=lines, dma_channels=(1, 4),
+                 num_channels=n_chans, mapping_policies=mappings,
+                 dram_sched_policies=spols, reorder_windows=wins,
+                 enable_cache=enable_cache)
+    a = tune(rows, row_bytes, engine="oracle", **grids)
+    b = tune(rows, row_bytes, engine="batched", **grids)
+    assert a.table == b.table
+    assert a.config == b.config
+    assert a.modeled_cycles == b.modeled_cycles
+    assert a.candidates_evaluated == b.candidates_evaluated
+
+
+def test_batched_tune_tiny_and_degenerate_traces():
+    """Five-request and single-request traces: the vectorized batch
+    plan and fused-key classification must survive the degenerate
+    shapes (partial batches everywhere, empty channels after
+    splitting)."""
+    for rows in (np.asarray([7], np.int64),
+                 np.asarray([3, 3, 9, 3, 11], np.int64)):
+        a = tune(rows, 4096, engine="oracle",
+                 batch_sizes=(4, 64), associativities=(1,),
+                 num_lines=(1024,), dma_channels=(1,),
+                 num_channels=(1, 4),
+                 dram_sched_policies=("fifo", "frfcfs"),
+                 reorder_windows=(1, 8))
+        b = tune(rows, 4096, engine="batched",
+                 batch_sizes=(4, 64), associativities=(1,),
+                 num_lines=(1024,), dma_channels=(1,),
+                 num_channels=(1, 4),
+                 dram_sched_policies=("fifo", "frfcfs"),
+                 reorder_windows=(1, 8))
+        assert a.table == b.table and a.config == b.config
+
+
+def test_tune_rejects_unknown_engine(trace):
+    with pytest.raises(ValueError, match="unknown tune engine"):
+        tune(trace, 512, engine="vmapped")
+
+
+# ---------------------------------------------------------------------------
+# sweep_serving_loads == MemoryController.simulate per point
+# ---------------------------------------------------------------------------
+
+def test_sweep_serving_loads_matches_controller(rng):
+    n = 3000
+    rows = ((rng.zipf(1.2, n) - 1) % 4096).astype(np.int64)
+    rw = (rng.random(n) < 0.2).astype(np.int32)
+    cfg = MemoryControllerConfig(
+        scheduler=SchedulerConfig(enabled=False),
+        cache=CacheConfig(enabled=False),
+        dram_sched=DRAMSchedConfig(policy="frfcfs_cap",
+                                   reorder_window=16, starvation_cap=8,
+                                   t_rfc=420, t_refi=9363))
+    cap = 0.09
+    arrivals = [np.cumsum(rng.exponential(1.0 / (cap * f), n))
+                for f in (0.5, 1.2)]
+    swept = sweep_serving_loads(cfg, rows, rw, None, arrivals, 4096)
+    mc = MemoryController(cfg)
+    for arr, res in zip(arrivals, swept):
+        ref = mc.simulate(None, rows, rw, 4096, arrival_cycle=arr)
+        assert ref.makespan_fpga_cycles == res.makespan_fpga_cycles
+        assert ref.serving.p50_sojourn == res.serving.p50_sojourn
+        assert ref.serving.p99_sojourn == res.serving.p99_sojourn
+        assert (ref.serving.sustained_req_per_cycle
+                == res.serving.sustained_req_per_cycle)
+        np.testing.assert_array_equal(ref.serving.sojourn_fpga_cycles,
+                                      res.serving.sojourn_fpga_cycles)
+
+
+def test_sweep_serving_loads_multiport_weighted(rng):
+    n = 2000
+    rows = ((rng.zipf(1.3, n) - 1) % 2048).astype(np.int64)
+    pe = rng.integers(0, 2, n).astype(np.int32)
+    arr = np.cumsum(rng.exponential(8.0, n))
+    cfg = MemoryControllerConfig(
+        num_pes=2,
+        scheduler=SchedulerConfig(enabled=False),
+        cache=CacheConfig(enabled=False),
+        dram_sched=DRAMSchedConfig(policy="frfcfs", reorder_window=8))
+    swept = sweep_serving_loads(cfg, rows, None, pe, [arr], 4096,
+                                arbiter_policy="weighted",
+                                weights=(4, 1))
+    ref = MemoryController(cfg).simulate(
+        pe, rows, None, 4096,
+        arbiter_policy="weighted", weights=(4, 1), arrival_cycle=arr)
+    res = swept[0]
+    assert ref.makespan_fpga_cycles == res.makespan_fpga_cycles
+    for p in ("0", "1"):
+        assert (ref.serving.per_port[int(p)]["p99_sojourn"]
+                == res.serving.per_port[int(p)]["p99_sojourn"])
+
+
+def test_sweep_serving_loads_validates_arrivals(rng):
+    rows = np.arange(64, dtype=np.int64)
+    cfg = MemoryControllerConfig(
+        scheduler=SchedulerConfig(enabled=False),
+        cache=CacheConfig(enabled=False))
+    with pytest.raises(ValueError, match="one entry per request"):
+        sweep_serving_loads(cfg, rows, None, None,
+                            [np.zeros(3)], 4096)
+    with pytest.raises(ValueError, match="finite"):
+        sweep_serving_loads(cfg, rows, None, None,
+                            [np.full(64, np.nan)], 4096)

@@ -438,3 +438,111 @@ def test_simulate_respects_dram_sched_config(rng):
     stage = deep.stage("dram_service")
     assert stage.info["sched_policy"] == "frfcfs"
     assert stage.info["reorder_window"] == 16
+
+
+# ---------------------------------------------------------------------------
+# Edge cases the fixed-point fast paths must pin (ISSUE 9): window
+# covering the whole trace, single-request traces, all-miss streams,
+# and the miss-heavy micro-step-budget boundary.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 40), st.integers(0, 1)),
+                min_size=1, max_size=96),
+       st.sampled_from(["frfcfs", "frfcfs_cap"]),
+       st.sampled_from([(0, 0), (5, 37)]),
+       st.booleans())
+def test_property_window_equals_trace_length(reqs, policy, refresh,
+                                             use_rw):
+    """reorder_window == len(trace): the whole stream is in flight at
+    once — the deepest reordering the config admits for this trace."""
+    t_rfc, t_refi = refresh
+    addrs, rw = _trace(reqs)
+    sched = DRAMSchedConfig(policy=policy, reorder_window=len(reqs),
+                            starvation_cap=3, t_rfc=t_rfc, t_refi=t_refi)
+    a = simulate_dram_sched(addrs, DDR4_2400, sched,
+                            rw=rw if use_rw else None)
+    b = simulate_dram_sched_seq(addrs, DDR4_2400, sched,
+                                rw=rw if use_rw else None)
+    _assert_sched_equal(a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(0, 1),
+       st.sampled_from(["fifo", "frfcfs", "frfcfs_cap"]),
+       st.sampled_from([1, 4, 64, 512]),
+       st.sampled_from([(0, 0), (5, 37)]),
+       st.booleans())
+def test_property_single_request(row, is_write, policy, window, refresh,
+                                 hbm):
+    """A one-request trace costs exactly one first access + one burst
+    under every policy/window/refresh combination, and the fast path
+    agrees with the oracle bit for bit."""
+    t_rfc, t_refi = refresh
+    timings = HBM_V5E if hbm else DDR4_2400
+    addrs = np.asarray([row], np.int64) * (timings.row_bytes // 2)
+    rw = np.asarray([is_write], np.int32)
+    sched = DRAMSchedConfig(policy=policy, reorder_window=window,
+                            starvation_cap=2, t_rfc=t_rfc, t_refi=t_refi)
+    a = simulate_dram_sched(addrs, timings, sched, rw=rw)
+    b = simulate_dram_sched_seq(addrs, timings, sched, rw=rw)
+    _assert_sched_equal(a, b)
+    assert a.first_accesses == 1
+    assert a.row_hits == 0 and a.row_conflicts == 0
+    assert a.turnaround_dram_cycles == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 180),
+       st.sampled_from(["frfcfs", "frfcfs_cap"]),
+       st.sampled_from([2, 8, 64]),
+       st.booleans())
+def test_property_all_miss_single_bank(n, policy, window, use_rw):
+    """Strictly increasing rows in one bank: nothing to reorder, every
+    access after the first conflicts, and no window/cap setting may
+    change that — reordering can only exploit row hits, and there are
+    none."""
+    timings = DDR4_2400
+    # stride num_banks rows -> same bank, all distinct rows
+    addrs = (np.arange(n, dtype=np.int64) * timings.num_banks
+             * timings.row_bytes)
+    rw = (np.arange(n, dtype=np.int32) % 3 == 0).astype(np.int32)
+    sched = DRAMSchedConfig(policy=policy, reorder_window=window,
+                            starvation_cap=2)
+    a = simulate_dram_sched(addrs, timings, sched,
+                            rw=rw if use_rw else None)
+    b = simulate_dram_sched_seq(addrs, timings, sched,
+                                rw=rw if use_rw else None)
+    _assert_sched_equal(a, b)
+    assert a.first_accesses == 1
+    assert a.row_hits == 0
+    assert a.row_conflicts == n - 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(80, 220),
+       st.sampled_from([2, 3, 8]),
+       st.sampled_from([1, 2, 5]),
+       st.booleans())
+def test_property_micro_step_budget_boundary(n, window, cap, use_rw):
+    """Miss-heavy capped traces around the fast path's python-step
+    budget (MICRO=96 scalar steps per drain): the mode switch between
+    the scalar drain and the bucketed scan must be invisible in the
+    results. All-conflict single-bank streams maximize scalar steps, so
+    drawing n across [80, 220] brackets the boundary from both sides."""
+    timings = DDR4_2400
+    rng = np.random.default_rng(n * 7 + window)
+    # same-bank all-distinct rows with a few duplicates sprinkled in so
+    # the window occasionally finds a hit right at the budget edge
+    rows = np.arange(n, dtype=np.int64)
+    dup = rng.integers(0, n, max(1, n // 16))
+    rows[dup] = rows[(dup + 1) % n]
+    addrs = rows * timings.num_banks * timings.row_bytes
+    rw = rng.integers(0, 2, n).astype(np.int32)
+    sched = DRAMSchedConfig(policy="frfcfs_cap", reorder_window=window,
+                            starvation_cap=cap)
+    a = simulate_dram_sched(addrs, timings, sched,
+                            rw=rw if use_rw else None)
+    b = simulate_dram_sched_seq(addrs, timings, sched,
+                                rw=rw if use_rw else None)
+    _assert_sched_equal(a, b)

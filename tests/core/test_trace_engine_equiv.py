@@ -309,3 +309,69 @@ def test_windowed_interleaved_streams_identical():
         fast = simulate_dram_access_windowed(addrs, window=window)
         ref = simulate_dram_access_windowed_seq(addrs, window=window)
         assert dataclasses.asdict(fast) == dataclasses.asdict(ref)
+
+
+# ---------------------------------------------------------------------------
+# Edge cases around the vectorized engines' mode boundaries (ISSUE 9):
+# single-request traces, all-miss streams (no reuse anywhere), and
+# lengths straddling the compaction threshold / tail-staircase chunks.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 4000), st.sampled_from([1, 2, 8]),
+       st.sampled_from([256, 4096]))
+def test_property_single_request_trace_identical(lid, ways, lines):
+    """One-request traces exercise every engine's n==1 corner: the
+    compacted oracle, the set-parallel scan, and the seq walk must all
+    agree — one miss, zero hits."""
+    cfg = CacheConfig(num_lines=lines, associativity=ways)
+    ids = np.asarray([lid], np.int64)
+    h_vec, r_vec = hit_rate_oracle(cfg, ids)
+    h_seq, r_seq = hit_rate_oracle_seq(cfg, ids)
+    np.testing.assert_array_equal(h_vec, h_seq)
+    assert r_vec == r_seq == 0.0
+    table = jnp.asarray(np.zeros((4096, 2)), jnp.float32)
+    state = init_cache(cfg, 2)
+    f_seq, h_seq, l_seq = simulate_trace_seq(
+        state, jnp.asarray(ids, jnp.int32), table)
+    f_par, h_par, l_par = simulate_trace(
+        state, jnp.asarray(ids, jnp.int32), table, engine="parallel")
+    _assert_state_equal(f_seq, f_par)
+    np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(h_par))
+    assert not bool(np.asarray(h_par)[0])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([64, 255, 256, 257, 1024, 4095, 4096, 4097]),
+       st.sampled_from([(256, 4), (1024, 1)]))
+def test_property_all_miss_trace_identical(n, shape):
+    """Distinct line ids everywhere — zero reuse, the worst case for
+    both the tail staircase (every lane survives to the finisher) and
+    the compacted layout (every set is cold). Lengths straddle the
+    TAIL_CHUNKS steps and the MIN_LOCKSTEP_TRACE=4096 compaction
+    threshold. Hit rate must be exactly 0 and both engines identical."""
+    lines, ways = shape
+    cfg = CacheConfig(num_lines=lines, associativity=ways)
+    ids = np.arange(n, dtype=np.int64)
+    h_vec, r_vec = hit_rate_oracle(cfg, ids)
+    h_seq, r_seq = hit_rate_oracle_seq(cfg, ids)
+    np.testing.assert_array_equal(h_vec, h_seq)
+    assert r_vec == r_seq == 0.0
+    assert not h_vec.any()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([4090, 4096, 4104, 8192]),
+       st.integers(0, 3))
+def test_property_compaction_threshold_boundary(n, salt):
+    """Reuse-heavy traces at the MIN_LOCKSTEP_TRACE boundary: the
+    compacted-lane layout kicks in exactly at n==4096, and the verdict
+    must not depend on which side of the threshold the dispatch
+    lands."""
+    cfg = CacheConfig(num_lines=1024, associativity=4)
+    rng = np.random.default_rng(n + salt * 7919)
+    ids = (rng.zipf(1.3, n).astype(np.int64) - 1) % 2048
+    h_vec, r_vec = hit_rate_oracle(cfg, ids)
+    h_seq, r_seq = hit_rate_oracle_seq(cfg, ids)
+    np.testing.assert_array_equal(h_vec, h_seq)
+    assert r_vec == r_seq
