@@ -1,0 +1,177 @@
+"""Model-trace zoo benchmark — the paper's §V tuning question asked of
+real model traffic instead of two synthetic shapes.
+
+For every architecture in ``configs/registry.py`` the captured smoke
+trace (``repro.data.model_traces``: embedding gathers, embedding-grad
+scatters, KV appends, MoE expert dispatch, SSM state rewrites, frontend
+streams) is
+
+  1. replayed through the full ``MemoryController.simulate()`` pipeline
+     under ``PAPER_COMBINED_CONFIG`` (multi-port: captured PE ids folded
+     onto the 8 arbiter ports), and
+  2. fed to ``autotune.tune(engine="batched")`` over the joint
+     cache × channels × mapping × scheduler-batch × DRAM-sched/window
+     grid,
+
+answering whether *tuned controller geometry differs across model
+families* (MoE vs dense vs SSM vs multimodal) the way the paper's GCN
+differs from CNN. The verdict is machine-readable:
+``geometry_differs_across_families`` compares the tuned geometry of each
+family's representative architecture.
+
+Writes ``BENCH_model_traces.json``; ``--small`` trims the tune grid for
+the CI perf-smoke job (the trace set still covers all 10 architectures).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import emit, write_bench_json
+from repro.configs import registry
+from repro.core import autotune
+from repro.core.config import PAPER_COMBINED_CONFIG
+from repro.core.controller import MemoryController
+from repro.data import model_traces as mt
+
+# Joint tune grid (full run). The batched engine scores the whole grid as
+# one stacked computation, so the product stays cheap at zoo trace sizes.
+FULL_GRID = dict(
+    batch_sizes=(16, 64, 256),
+    associativities=(1, 4),
+    num_lines=(1024, 4096, 16384),
+    dma_channels=(4,),
+    num_channels=(1, 2, 4),
+    mapping_policies=("row_interleave", "xor"),
+    dram_sched_policies=("fifo", "frfcfs"),
+    reorder_windows=(1, 16, 64),
+)
+SMALL_GRID = dict(
+    batch_sizes=(16, 64),
+    associativities=(1, 4),
+    num_lines=(1024, 4096),
+    dma_channels=(4,),
+    num_channels=(1, 4),
+    mapping_policies=("row_interleave", "xor"),
+    dram_sched_policies=("fifo", "frfcfs"),
+    reorder_windows=(1, 16),
+)
+
+
+def _geometry(cfg) -> dict:
+    """The tuned controller geometry, flattened for comparison."""
+    return {
+        "sched_batch": cfg.scheduler.batch_size,
+        "cache_ways": cfg.cache.associativity,
+        "cache_lines": cfg.cache.num_lines,
+        "num_channels": cfg.channels.num_channels,
+        "mapping": cfg.channels.policy,
+        "dram_sched": cfg.dram_sched.policy,
+        "reorder_window": cfg.dram_sched.reorder_window,
+        "dma_channels": cfg.dma.num_parallel_dma,
+    }
+
+
+def run(small: bool = False) -> dict:
+    grid = SMALL_GRID if small else FULL_GRID
+    base = PAPER_COMBINED_CONFIG
+    results: dict = {
+        "benchmark": "model_trace_zoo",
+        "unit": "modeled_fpga_cycles",
+        "row_bytes": mt.REPLAY_ROW_BYTES,
+        "capture_shape": {"batch": mt.CAPTURE_BATCH, "seq": mt.CAPTURE_SEQ,
+                          "decode_steps": mt.CAPTURE_DECODE_STEPS,
+                          "seed": mt.TRACE_SEED},
+        "grid": {k: list(v) for k, v in grid.items()},
+        "configs": {},
+        "families": {},
+    }
+    families = mt.arch_families()
+    covered = 0
+    for arch in registry.ARCH_IDS:
+        fam = families[arch]
+        t0 = time.perf_counter()
+        try:
+            cap = mt.cached_capture(arch)
+            pe, rows, rw = cap.replay_arrays(base.num_pes)
+            res = MemoryController(base).simulate(pe, rows, rw,
+                                                  mt.REPLAY_ROW_BYTES)
+            tr = autotune.tune(rows, mt.REPLAY_ROW_BYTES,
+                               engine="batched", **grid)
+        except Exception as e:  # a broken config must not hide the rest
+            results["configs"][arch] = {"family": fam, "error": repr(e)}
+            emit(f"perf_model_traces/{arch}", 0.0, f"ERROR {e!r}")
+            continue
+        covered += 1
+        dt = (time.perf_counter() - t0) * 1e6
+        geom = _geometry(tr.config)
+        rec = {
+            "family": fam,
+            "trace": mt.summarize(cap),
+            "simulate": {
+                "config": "PAPER_COMBINED_CONFIG",
+                "makespan_fpga_cycles": round(res.makespan_fpga_cycles),
+                "dram_makespan_fpga_cycles": round(
+                    res.dram_makespan_fpga_cycles),
+                "cache_hit_rate": (None if res.cache_hit_rate is None
+                                   else round(res.cache_hit_rate, 4)),
+                "breakdown": {k: round(v, 1)
+                              for k, v in res.breakdown().items()},
+            },
+            "tuned": {
+                "modeled_cycles": round(tr.modeled_cycles, 1),
+                "candidates_evaluated": tr.candidates_evaluated,
+                "geometry": geom,
+                "speedup_vs_paper_combined": round(
+                    res.makespan_fpga_cycles / max(1.0, tr.modeled_cycles),
+                    3),
+            },
+        }
+        results["configs"][arch] = rec
+        emit(f"perf_model_traces/{arch}", dt,
+             f"family={fam}|n={len(cap)}|"
+             f"makespan={rec['simulate']['makespan_fpga_cycles']}|"
+             f"tuned={rec['tuned']['modeled_cycles']}|"
+             f"geom={'/'.join(str(v) for v in geom.values())}")
+
+    # Per-family verdict: the representative architecture's tuned geometry
+    # (pinned-trace families), compared across families.
+    geoms = {}
+    for fam, arch in sorted(mt.FAMILY_REPRESENTATIVE.items()):
+        rec = results["configs"].get(arch, {})
+        if "tuned" not in rec:
+            continue
+        results["families"][fam] = {
+            "representative": arch,
+            "geometry": rec["tuned"]["geometry"],
+            "tuned_cycles": rec["tuned"]["modeled_cycles"],
+        }
+        geoms[fam] = tuple(sorted(rec["tuned"]["geometry"].items()))
+    differs = len(set(geoms.values())) >= 2
+    results["geometry_differs_across_families"] = bool(differs)
+    results["gate"] = {
+        # gated in scripts/check_perf_regressions.py: both must hold at
+        # --small size too (1/0 and a fraction, so the ratio floor works)
+        "geometry_differs": int(differs),
+        "configs_covered_frac": round(covered / len(registry.ARCH_IDS), 3),
+    }
+    results["n_configs_covered"] = covered
+    emit("perf_model_traces/verdict", 0.0,
+         f"covered={covered}/{len(registry.ARCH_IDS)}|"
+         f"geometry_differs_across_families={differs}")
+    write_bench_json("model_traces", results)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--small", action="store_true",
+                    help="CI perf-smoke size (trimmed tune grid)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(small=args.small)
+
+
+if __name__ == "__main__":
+    main()

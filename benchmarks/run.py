@@ -22,8 +22,11 @@ probes run from here too: ``perf_serving`` (open-loop latency/
 throughput + tenant isolation, ``BENCH_serving.json``),
 ``perf_autotune`` (batched vs one-at-a-time full-grid tune,
 ``BENCH_autotune.json``), ``perf_faults`` (RAS degradation sweep,
-``BENCH_faults.json``) and ``perf_telemetry`` (tracing-off
-bit-identity + tracing-on overhead, ``BENCH_telemetry.json``). A
+``BENCH_faults.json``), ``perf_telemetry`` (tracing-off
+bit-identity + tracing-on overhead, ``BENCH_telemetry.json``) and
+``perf_model_traces`` (captured per-architecture workload zoo replayed
+through simulate() + the batched autotune grid,
+``BENCH_model_traces.json``). A
 per-benchmark wall-time table prints at the end of the run. Only the
 minutes-long engine microbenches
 stay separate: ``benchmarks/perf_trace_engine.py`` writes
@@ -40,8 +43,8 @@ from benchmarks import (autotune_bench, fig5_dma_resources,
                         fig6_scheduler_cost, fig7_workloads,
                         fig7_write_workloads, fig8_interface_width,
                         fig9_schedule_time, perf_autotune, perf_faults,
-                        perf_pipeline, perf_serving, perf_telemetry,
-                        table3_cache_resources)
+                        perf_model_traces, perf_pipeline, perf_serving,
+                        perf_telemetry, table3_cache_resources)
 from benchmarks.common import write_bench_json
 
 
@@ -71,6 +74,8 @@ def main() -> None:
     timed("perf_autotune", perf_autotune.run)   # BENCH_autotune.json
     timed("perf_faults", perf_faults.run)       # BENCH_faults.json
     timed("perf_telemetry", perf_telemetry.run)  # BENCH_telemetry.json
+    timed("perf_model_traces",                  # BENCH_model_traces.json
+          perf_model_traces.run)
 
     # Wall-time summary — where a full `python -m benchmarks.run`
     # actually spends its minutes.

@@ -46,6 +46,13 @@ GATED: dict[str, list[str]] = {
     "BENCH_autotune.json": [
         "headline_speedup_batched_vs_oracle",
     ],
+    # Model-trace zoo acceptance gates (PR 10): geometry_differs is 1/0
+    # and configs_covered_frac is a fraction of the 10 registry archs —
+    # both must hold at --small size (the ratio floor catches any drop).
+    "BENCH_model_traces.json": [
+        "gate.geometry_differs",
+        "gate.configs_covered_frac",
+    ],
 }
 
 

@@ -8,10 +8,19 @@ then review the JSON diffs — every changed number is a modeled-behavior
 change the PR must be able to explain. The case definitions live in
 ``tests/core/golden_cases.py`` (shared with the checking test, so the
 writer and the checker can never disagree).
+
+``--traces`` additionally *recaptures* the pinned per-family model
+traces in ``tests/goldens/traces/`` from the live models
+(``repro.data.model_traces``) before re-snapshotting their records.
+Without the flag, the existing trace files are kept and only the
+simulate() records are recomputed — the right default, since the trace
+bytes should change only when model/capture behavior intentionally
+changes.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -19,13 +28,21 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
                                 "tests", "core"))
 
-from golden_cases import (CASES, GOLDEN_DIR, SERVING_CASES,  # noqa: E402
-                          golden_record)
+from golden_cases import (CASES, GOLDEN_DIR,  # noqa: E402
+                          MODEL_TRACE_CASES, SERVING_CASES, golden_record)
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--traces", action="store_true",
+                    help="recapture the pinned model traces from the "
+                         "live models before re-snapshotting")
+    args = ap.parse_args()
     os.makedirs(GOLDEN_DIR, exist_ok=True)
-    for name in list(CASES) + list(SERVING_CASES):
+    if args.traces:
+        from repro.data.model_traces import write_pinned_traces
+        write_pinned_traces()
+    for name in list(CASES) + list(SERVING_CASES) + list(MODEL_TRACE_CASES):
         path = os.path.join(GOLDEN_DIR, f"{name}.json")
         record = golden_record(name)
         with open(path, "w") as f:

@@ -6,6 +6,7 @@ the DRAM/HBM cost model (Eq. 1-3) and the cycle-level simulator used for
 the paper-claim reproductions.
 """
 
+from repro.core.capture import TraceCapture, active_capture
 from repro.core.channels import (AddressMap, ArbiterStats, ChannelSimResult,
                                  arbitrate_ports, simulate_channels,
                                  simulate_multiport_channels)
@@ -25,6 +26,7 @@ from repro.core.timing import (DDR4_2400, DRAMTimings, HBM_V5E,
                                turnaround_cycles)
 
 __all__ = [
+    "TraceCapture", "active_capture",
     "CacheConfig", "ChannelConfig", "DMAConfig", "DRAMSchedConfig",
     "MemoryControllerConfig",
     "SchedulerConfig", "PAPER_EVAL_CONFIG", "PAPER_COMBINED_CONFIG",

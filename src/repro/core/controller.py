@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import capture as capture_mod
 from repro.core import channels as channels_mod
 from repro.core import dma_engine, pipeline as pipeline_mod
 from repro.core import scatter_util, scheduler
@@ -155,9 +156,39 @@ class MemoryController:
     config: MemoryControllerConfig
     use_pallas: bool = False
     timings: DRAMTimings = dataclasses.field(default_factory=lambda: DDR4_2400)
+    # Opt-in trace recorder (ARCHITECTURE §13). When set, the data-plane
+    # entry points below report their request batches into it — values
+    # are never touched (``capture=None`` is bit-identical, the same
+    # contract as ``telemetry.TraceRecorder``). The ``mc_*`` model
+    # wrappers use the ambient ``capture.active_capture()`` instead (they
+    # only hold a config); this field records *only* to itself so a
+    # wrapper delegating to a controller method never double-records.
+    capture: "capture_mod.TraceCapture | None" = None
+
+    def _record(self, op: str, table, row_ids, rw: int) -> None:
+        if self.capture is None:
+            return
+        n_rows = int(table.shape[0])
+        row_bytes = int(table.shape[-1]) * int(
+            jnp.dtype(table.dtype).itemsize)
+        self.capture.record(op, f"table:{n_rows}x{row_bytes}", n_rows,
+                            row_bytes, row_ids, rw=rw)
+
+    def _record_bulk(self, op: str, dst, nbytes: int, rw: int,
+                     offset_bytes: int = 0) -> None:
+        if self.capture is None:
+            return
+        total = int(np.prod(dst.shape)) * int(jnp.dtype(dst.dtype).itemsize)
+        rb = capture_mod.DEFAULT_ROW_BYTES
+        pages = max(1, -(-total // rb))
+        first = int(offset_bytes) // rb
+        count = max(1, -(-int(nbytes) // rb))
+        self.capture.record_slice(op, f"bulk:{pages}x{rb}", pages, rb,
+                                  first, min(count, pages - first), rw=rw)
 
     # --- cache-line / irregular path ---------------------------------------
     def gather(self, table: jnp.ndarray, indices: jnp.ndarray) -> jnp.ndarray:
+        self._record("gather", table, indices, rw=0)
         if self.config.scheduler.enabled:
             return sorted_gather(table, indices, use_pallas=self.use_pallas)
         return jnp.take(table, indices.reshape(-1), axis=0).reshape(
@@ -167,6 +198,7 @@ class MemoryController:
         self, table: jnp.ndarray, indices: jnp.ndarray, cache: HotRowCache
     ) -> jnp.ndarray:
         if self.config.cache.enabled:
+            self._record("gather", table, indices, rw=0)
             return cache.gather(table, indices)
         return self.gather(table, indices)
 
@@ -184,6 +216,7 @@ class MemoryController:
         """
         if mode not in ("set", "add"):
             raise ValueError(f"mode must be 'set' or 'add', got {mode!r}")
+        self._record("scatter", table, indices, rw=1)
         if self.config.scheduler.enabled:
             return sorted_scatter(table, indices, values, mode=mode,
                                   use_pallas=self.use_pallas)
@@ -213,6 +246,10 @@ class MemoryController:
 
     # --- bulk path ----------------------------------------------------------
     def bulk_read(self, src: jnp.ndarray) -> jnp.ndarray:
+        self._record_bulk(
+            "bulk_read", src,
+            int(np.prod(src.shape)) * int(jnp.dtype(src.dtype).itemsize),
+            rw=0)
         if self.config.dma.enabled:
             return dma_engine.bulk_copy(src, config=self.config.dma,
                                         use_pallas=self.use_pallas)
@@ -228,6 +265,9 @@ class MemoryController:
         # result depend on the engine toggle.
         if offset_elems < 0 or offset_elems + src.size > dst.size:
             raise ValueError("bulk_write region out of destination bounds")
+        item = int(jnp.dtype(dst.dtype).itemsize)
+        self._record_bulk("bulk_write", dst, int(src.size) * item, rw=1,
+                          offset_bytes=int(offset_elems) * item)
         if self.config.dma.enabled:
             return dma_engine.bulk_write(dst, src, config=self.config.dma,
                                          offset_elems=offset_elems,

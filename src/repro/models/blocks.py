@@ -14,8 +14,10 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import capture as capture_mod
 from repro.models import layers
 from repro.models.params import mamba_dims
 from repro.models.sharding import Rules, shard
@@ -177,6 +179,36 @@ def mlp_forward(p, x, rules: Rules, mesh):
 # MoE — the memory-controller scheduler at cluster scale
 # ---------------------------------------------------------------------------
 
+def capture_moe_dispatch(top_e, n_tokens: int, d_model: int,
+                         itemsize: int) -> None:
+    """Report a routed MoE layer's traffic into the active TraceCapture.
+
+    The genuine multi-port view of expert dispatch (paper Fig. 2 /
+    Nguyen et al.): **the expert id is the port** (``pe_id`` = expert —
+    experts are the PEs contending for the channels), the request row is
+    the *token's* activation row in the dispatch buffer region, READ on
+    dispatch and WRITE on combine. ``top_e`` is ``(T, k)``; a traced
+    value (jit/shard_map) skips the record, counted by the recorder.
+    """
+    cap = capture_mod.active_capture()
+    if cap is None:
+        return
+    te = capture_mod.concrete(top_e)
+    if te is None:
+        cap.n_skipped_traced += 1
+        return
+    te = te.astype(np.int64)
+    T, k = te.shape
+    row_bytes = int(d_model) * int(itemsize)
+    name = f"moe_tokens:{int(n_tokens)}x{row_bytes}"
+    tok = np.repeat(np.arange(T, dtype=np.int64), k)
+    pe = te.reshape(-1)
+    cap.record("moe_dispatch", name, int(n_tokens), row_bytes, tok,
+               rw=0, pe_id=pe)
+    cap.record("moe_combine", name, int(n_tokens), row_bytes, tok,
+               rw=1, pe_id=pe)
+
+
 def moe_ffn(p, x, cfg: ArchConfig, rules: Rules, mesh, *,
             no_drop: bool = False, dispatch: str = "sort",
             num_groups: int = 1):
@@ -213,6 +245,7 @@ def moe_ffn(p, x, cfg: ArchConfig, rules: Rules, mesh, *,
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_e = jax.lax.top_k(probs, m.top_k)           # (T, k)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    capture_moe_dispatch(top_e, T, D, jnp.dtype(x.dtype).itemsize)
 
     # --- load-balance + router-z auxiliary losses (Switch/ST-MoE) ---
     me = probs.mean(0)                                     # (E,)
@@ -408,6 +441,17 @@ def mamba_decode(p, x, cache: MambaCache, cfg: ArchConfig, rules: Rules,
     """O(1) recurrent step. x: (B, D)."""
     B, D = x.shape
     d_in, H, P, N = mamba_dims(cfg)
+    cap = capture_mod.active_capture()
+    if cap is not None and capture_mod.is_concrete(x):
+        # SSM family signature: every decode step rewrites the whole
+        # (H, P, N) recurrent state — a wide sequential page-write burst
+        # per sequence (port = sequence), nothing like KV's single-slot
+        # append. Static shapes, so gate on x being concrete to avoid
+        # recording during jit tracing.
+        page_bytes = P * N * 4                      # f32 state rows
+        cap.record("ssm_state_update", f"ssm:{H}x{page_bytes}", H,
+                   page_bytes, np.tile(np.arange(H, dtype=np.int64), B),
+                   rw=1, pe_id=np.repeat(np.arange(B, dtype=np.int64), H))
     z, xin, b, c, dt = _mamba_project(p, x[:, None, :], cfg)
     xin, conv_x = _causal_conv(xin, p["conv_x"], cache.conv_x)
     b, conv_b = _causal_conv(b, p["conv_b"], cache.conv_b)

@@ -27,7 +27,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import capture as capture_mod
 from repro.core.config import MemoryControllerConfig
 
 
@@ -167,16 +169,51 @@ def decode_attention(
 # Controller-routed embedding
 # ---------------------------------------------------------------------------
 
+def _embed_region(table: jnp.ndarray) -> tuple:
+    """(region_name, n_rows, row_bytes) of an embedding table — shared by
+    ``mc_embed`` (READ) and ``mc_scatter`` (WRITE) so both directions of
+    embedding traffic land on the same captured rows."""
+    n_rows = int(table.shape[0])
+    row_bytes = int(table.shape[-1]) * int(np.dtype(table.dtype).itemsize)
+    return f"embed:{n_rows}x{row_bytes}", n_rows, row_bytes
+
+
+def _capture_embed(op: str, table, tokens, rw: int) -> None:
+    cap = capture_mod.active_capture()
+    if cap is None:
+        return
+    name, n_rows, row_bytes = _embed_region(table)
+    shape = tuple(tokens.shape)
+    if len(shape) >= 2:
+        # one port per sequence (leading dims flattened): the multi-PE
+        # front end sees each sequence's token stream on its own port
+        lead = int(np.prod(shape[:-1]))
+        pe = np.repeat(np.arange(lead, dtype=np.int64), shape[-1])
+    else:
+        pe = 0          # single-sequence / decode stream — one port
+    cap.record(op, name, n_rows, row_bytes, tokens, rw=rw, pe_id=pe)
+
+
 def mc_embed(table: jnp.ndarray, tokens: jnp.ndarray,
              mc: MemoryControllerConfig) -> jnp.ndarray:
     """Embedding gather through the memory controller's scheduler.
 
     Requests are stable-sorted *per sequence* (axis -1) — each sequence is
-    one scheduler batch, matching the paper's bounded batch size — gathered
-    in row order, and unsorted. Value-identical to ``table[tokens]``.
+    one scheduler batch, matching the paper's bounded batch size. 1-D (and
+    scalar) token streams — the decode-step path — are one sequence, so
+    the whole stream forms a single scheduler batch instead of bypassing
+    the controller. Value-identical to ``table[tokens]``.
     """
-    if not mc.scheduler.enabled or tokens.ndim < 2:
+    _capture_embed("embed_gather", table, tokens, rw=0)
+    if not mc.scheduler.enabled:
         return jnp.take(table, tokens, axis=0)
+    if tokens.ndim < 2:
+        flat = tokens.reshape(-1)
+        perm = jnp.argsort(flat, stable=True)
+        gathered = jnp.take(table, jnp.take(flat, perm, axis=0), axis=0)
+        inv = jnp.argsort(perm, stable=True)
+        out = jnp.take(gathered, inv, axis=0)
+        return out.reshape(*tokens.shape, table.shape[-1])
     perm = jnp.argsort(tokens, axis=-1, stable=True)
     sorted_tok = jnp.take_along_axis(tokens, perm, axis=-1)
     gathered = jnp.take(table, sorted_tok, axis=0)
@@ -196,6 +233,7 @@ def mc_scatter(table: jnp.ndarray, tokens: jnp.ndarray,
     ``table.at[tokens].add(values)`` / last-writer-wins ``set``.
     """
     from repro.core.controller import MemoryController
+    _capture_embed("embed_scatter", table, tokens, rw=1)
     return MemoryController(mc).scatter(table, tokens, values, mode=mode)
 
 
@@ -207,10 +245,19 @@ def mc_kv_append(buf: jnp.ndarray, new: jnp.ndarray, slot,
     A cache row is a contiguous page, so the append is classified as a
     bulk/streaming write (cache-bypassing), not an irregular scatter;
     its DRAM cost is what ``benchmarks/fig7_write_workloads.py`` models.
-    The data-plane transport here is the default dynamic-update for every
-    engine setting — ``mc`` marks the request class at the call site (and
-    reserves the seam for a modeled-transport hook) without affecting
-    values.
+    The data-plane transport is the default dynamic-update for every
+    engine setting; ``mc`` marks the request class, which the capture
+    hook reports as ``kv_append`` bulk-write records (op label suffixed
+    ``_dma`` when the config's DMA engine owns the stream) — never
+    affecting stored values.
     """
-    del mc  # request classification only; never affects stored values
+    cap = capture_mod.active_capture()
+    if cap is not None:
+        pages = int(buf.shape[axis])
+        n_new = int(new.shape[axis])
+        page_bytes = (int(np.prod(new.shape)) // max(1, n_new)
+                      * int(np.dtype(new.dtype).itemsize))
+        op = "kv_append_dma" if mc.dma.enabled else "kv_append"
+        cap.record_slice(op, f"kv:{pages}x{page_bytes}", pages, page_bytes,
+                         slot, n_new, rw=1)
     return jax.lax.dynamic_update_slice_in_dim(buf, new, slot, axis)

@@ -46,15 +46,37 @@ class LM:
         return param_specs(self.cfg, self.rules)
 
     # ---------------- input embedding --------------------------------------
+    @staticmethod
+    def _capture_frontend(op: str, frames) -> None:
+        """Report an audio/vision frontend's (B, S, F) embedding stream as
+        sequential bulk reads — one page per frame/patch, one port per
+        sequence. Purely observational (the data plane is the matmul
+        below); skipped under tracing like every capture hook."""
+        from repro.core import capture as capture_mod
+        cap = capture_mod.active_capture()
+        if cap is None:
+            return
+        if not capture_mod.is_concrete(frames):
+            cap.n_skipped_traced += 1
+            return
+        import numpy as np
+        B, S, F = frames.shape
+        page_bytes = int(F) * int(jnp.dtype(frames.dtype).itemsize)
+        cap.record(op, f"{op}:{B * S}x{page_bytes}", B * S, page_bytes,
+                   np.arange(B * S, dtype=np.int64), rw=0,
+                   pe_id=np.repeat(np.arange(B, dtype=np.int64), S))
+
     def _embed_inputs(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Returns (x (B,S,D), loss_mask (B,S))."""
         cfg = self.cfg
         if cfg.modality == "audio":
             frames = batch["frames"]
+            self._capture_frontend("audio_frames", frames)
             x = frames @ params["connector"]["w"]
             x = layers.rms_norm(x, params["connector"]["ln"])
             mask = jnp.ones(x.shape[:2], jnp.float32)
         elif cfg.modality == "vision_text":
+            self._capture_frontend("vision_patches", batch["vision_embeds"])
             vis = batch["vision_embeds"] @ params["connector"]["w"]
             vis = layers.rms_norm(vis, params["connector"]["ln"])
             txt = layers.mc_embed(params["embed"]["table"], batch["tokens"],
@@ -379,7 +401,9 @@ class LM:
                     cur_len: jnp.ndarray):
         """One serve step: embed token (B,), walk layers, update cache."""
         cfg = self.cfg
-        x = jnp.take(params["embed"]["table"], token, axis=0)
+        # The 1-D decode token stream is controller traffic too: one
+        # scheduler batch through mc_embed, not a raw bypassing take.
+        x = layers.mc_embed(params["embed"]["table"], token, cfg.mc)
         x, _, new_cache = self._scan_layers(params, x, None, "decode",
                                             cache=cache, cur_len=cur_len)
         xn = layers.rms_norm(x, params["final_norm"])

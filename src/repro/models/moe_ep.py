@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ArchConfig
+from repro.core import capture as capture_mod
 from repro.models import layers
 
 
@@ -51,6 +52,18 @@ def moe_ffn_ep(p, x, cfg: ArchConfig, mesh, *, no_drop: bool = False):
     all_axes = batch_axes + ("model",)
 
     B, S, D = x.shape
+
+    # Trace capture happens out here: the shard_map body only ever sees
+    # tracers, so the router is re-evaluated eagerly (capture-only —
+    # never feeds the data plane) to report the global dispatch.
+    if capture_mod.active_capture() is not None \
+            and capture_mod.is_concrete(x):
+        xn_g = layers.rms_norm(x, p["ln"]).reshape(B * S, D)
+        probs_g = jax.nn.softmax(
+            (xn_g @ p["router"]).astype(jnp.float32), axis=-1)
+        _, top_e_g = jax.lax.top_k(probs_g, m.top_k)
+        from repro.models.blocks import capture_moe_dispatch
+        capture_moe_dispatch(top_e_g, B * S, D, jnp.dtype(x.dtype).itemsize)
 
     @partial(
         compat.shard_map,

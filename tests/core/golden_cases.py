@@ -210,18 +210,26 @@ def _serving_record(name: str) -> dict:
     return rec
 
 
-def golden_record(name: str) -> dict:
-    """Run one case through ``MemoryController.simulate`` and flatten
-    the full ``PipelineResult`` view into a JSON-stable record."""
-    if name in SERVING_CASES:
-        return _serving_record(name)
-    config, trace, multiport = CASES[name]
-    rows, rw = trace()
-    pe = None
-    if multiport:
-        pe = np.random.default_rng(2).integers(0, config.num_pes,
-                                               rows.shape[0])
-    res = MemoryController(config).simulate(pe, rows, rw, ROW_BYTES)
+# ---------------------------------------------------------------------------
+# Captured model-trace cases (PR 10): one pinned trace per model family
+# (``tests/goldens/traces/<arch>.json``, written by
+# ``scripts/regen_goldens.py --traces``) replayed closed-loop through the
+# paper's combined configuration. The pinned *record* is the simulate()
+# breakdown of the pinned *trace file* — byte-stable because both sides
+# live on disk (model/numpy drift only shows up when the traces are
+# deliberately recaptured).
+# ---------------------------------------------------------------------------
+
+def _model_trace_cases() -> dict:
+    from repro.data.model_traces import FAMILY_REPRESENTATIVE
+    return {f"model_trace_{family}": arch
+            for family, arch in FAMILY_REPRESENTATIVE.items()}
+
+
+MODEL_TRACE_CASES: dict = _model_trace_cases()
+
+
+def _closed_loop_record(res) -> dict:
     agg = res.as_channel_result()
     return {
         "n_requests": res.n_requests,
@@ -237,3 +245,34 @@ def golden_record(name: str) -> dict:
         "stage_requests": {s.name: [s.in_requests, s.out_requests]
                            for s in res.stages},
     }
+
+
+def _model_trace_record(name: str) -> dict:
+    from repro.data.model_traces import (REPLAY_ROW_BYTES,
+                                         load_pinned_trace)
+    arch = MODEL_TRACE_CASES[name]
+    cap = load_pinned_trace(arch)
+    pe, rows, rw = cap.replay_arrays(PAPER_COMBINED_CONFIG.num_pes)
+    res = MemoryController(PAPER_COMBINED_CONFIG).simulate(
+        pe, rows, rw, REPLAY_ROW_BYTES)
+    rec = _closed_loop_record(res)
+    rec["arch"] = arch
+    rec["op_counts"] = cap.op_counts()
+    return rec
+
+
+def golden_record(name: str) -> dict:
+    """Run one case through ``MemoryController.simulate`` and flatten
+    the full ``PipelineResult`` view into a JSON-stable record."""
+    if name in SERVING_CASES:
+        return _serving_record(name)
+    if name in MODEL_TRACE_CASES:
+        return _model_trace_record(name)
+    config, trace, multiport = CASES[name]
+    rows, rw = trace()
+    pe = None
+    if multiport:
+        pe = np.random.default_rng(2).integers(0, config.num_pes,
+                                               rows.shape[0])
+    res = MemoryController(config).simulate(pe, rows, rw, ROW_BYTES)
+    return _closed_loop_record(res)

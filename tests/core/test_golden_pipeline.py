@@ -19,8 +19,8 @@ import os
 
 import pytest
 
-from golden_cases import (CASES, GOLDEN_DIR, SERVING_CASES,
-                          golden_record)
+from golden_cases import (CASES, GOLDEN_DIR, MODEL_TRACE_CASES,
+                          SERVING_CASES, golden_record)
 
 _REGEN = ("snapshot mismatch for {name!r} at key {key!r}:\n"
           "  golden:   {want!r}\n"
@@ -38,7 +38,8 @@ def _load(name: str) -> dict:
         return json.load(f)
 
 
-@pytest.mark.parametrize("name", sorted(CASES) + sorted(SERVING_CASES))
+@pytest.mark.parametrize("name", sorted(CASES) + sorted(SERVING_CASES)
+                         + sorted(MODEL_TRACE_CASES))
 def test_golden_snapshot(name):
     golden = _load(name)
     got = golden_record(name)
@@ -54,7 +55,13 @@ def test_goldens_have_no_strays():
     files would silently stop being checked)."""
     on_disk = {f[:-5] for f in os.listdir(GOLDEN_DIR)
                if f.endswith(".json")}
-    assert on_disk == set(CASES) | set(SERVING_CASES)
+    assert on_disk == set(CASES) | set(SERVING_CASES) \
+        | set(MODEL_TRACE_CASES)
+    # pinned trace files (traces/ subdir) must match the case set too
+    from repro.data.model_traces import TRACE_DIR
+    trace_files = {f[:-5] for f in os.listdir(TRACE_DIR)
+                   if f.endswith(".json")}
+    assert trace_files == set(MODEL_TRACE_CASES.values())
 
 
 def test_golden_frfcfs_beats_fifo_on_record():

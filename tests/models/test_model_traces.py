@@ -1,0 +1,83 @@
+"""Registry audit through the workload zoo (PR 10, satellite 3).
+
+Every architecture in ``configs/registry.py`` must (a) load in both
+smoke and full form, (b) produce a non-empty captured trace at the zoo's
+smoke exercise shape with no hook skipped under tracing, and (c) yield a
+trace that round-trips ``RequestStream.from_rows`` validation and folds
+onto the paper controller's ports. Captures are shared process-wide via
+``cached_capture`` so the parametrized audit pays each model once.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.config import PAPER_COMBINED_CONFIG
+from repro.data import model_traces as mt
+
+EXPECTED_OPS = {
+    # every family must emit its signature traffic class (ARCHITECTURE §13)
+    "dense": {"embed_gather", "embed_scatter"},
+    "moe": {"embed_gather", "moe_dispatch", "moe_combine"},
+    "ssm": {"embed_gather", "ssm_state_update"},
+    "hybrid": {"embed_gather", "moe_dispatch", "ssm_state_update"},
+    "encoder": {"audio_frames"},
+    "vlm": {"embed_gather", "vision_patches"},
+}
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_config_loads_smoke_and_full(arch):
+    smoke = registry.get_arch(arch, smoke=True)
+    full = registry.get_arch(arch)
+    assert smoke.family == full.family
+    assert smoke.num_layers <= full.num_layers
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_capture_nonempty_and_validates(arch):
+    cap = mt.cached_capture(arch)
+    assert len(cap) > 0 and cap.n_skipped_traced == 0
+    r = cap.rows()
+    # in-bounds rows, binary rw, positive sizes, monotone logical clock
+    assert r["row_id"].min() >= 0
+    assert r["row_id"].max() < cap.n_rows_total
+    assert set(np.unique(r["rw"])) <= {0, 1}
+    assert (r["nbytes"] > 0).all()
+    assert (np.diff(r["arrival_cycle"]) >= 0).all()
+    # RequestStream round-trip: the single validated ingestion point
+    # accepts the trace at the canonical replay stride
+    stream = cap.as_request_stream(row_bytes=mt.REPLAY_ROW_BYTES,
+                                   num_ports=PAPER_COMBINED_CONFIG.num_pes)
+    assert len(stream) == len(cap)
+    # and the fold honors the controller's port count
+    pe, rows, rw = cap.replay_arrays(PAPER_COMBINED_CONFIG.num_pes)
+    assert pe.max() < PAPER_COMBINED_CONFIG.num_pes
+    assert rows.size == rw.size == len(cap)
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_capture_contains_family_signature_ops(arch):
+    fam = registry.get_arch(arch, smoke=True).family
+    counts = mt.cached_capture(arch).op_counts()
+    missing = EXPECTED_OPS[fam] - set(counts)
+    assert not missing, (f"{arch} ({fam}): expected traffic classes "
+                        f"missing from capture: {sorted(missing)}; "
+                        f"got {sorted(counts)}")
+
+
+def test_family_map_covers_all_archs():
+    fams = mt.arch_families()
+    assert set(fams) == set(registry.ARCH_IDS)
+    # every family has a pinned representative, and it is a registry id
+    assert set(mt.FAMILY_REPRESENTATIVE) == set(fams.values())
+    for fam, arch in mt.FAMILY_REPRESENTATIVE.items():
+        assert fams[arch] == fam
+
+
+def test_pinned_traces_exist_for_every_family():
+    import os
+    for arch in mt.FAMILY_REPRESENTATIVE.values():
+        assert os.path.exists(mt.pinned_trace_path(arch)), (
+            f"missing pinned trace for {arch} — run "
+            "scripts/regen_goldens.py --traces")
